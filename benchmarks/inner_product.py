@@ -1,0 +1,70 @@
+"""§3.1 inner product: BSPS cost prediction vs measured hyperstep timings.
+
+T = n·max(2C, 2Ce) + p + (p−1)g + l  (paper's closed form). With e ≫ 1 on
+every real machine's external link, inner product is bandwidth heavy at any
+token size — we verify the model's prediction tracks the measurement across
+token sizes C, and that prefetch overlap (the hyperstep) hides compute under
+fetch as Fig. 1 claims.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.calibrate import calibrate, measure_fetch_model
+from repro.core import HyperstepRunner, StreamSet, inner_product_cost
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    acc = calibrate()
+    bw_words, t0 = measure_fetch_model()   # Fig. 4 size-dependent link model
+    n = 1 << 22  # 4M floats
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(n).astype(np.float32)
+    u = rng.standard_normal(n).astype(np.float32)
+    dot = jax.jit(lambda acc_, x, y: acc_ + jnp.vdot(x, y))
+
+    for log_c in (14, 16, 18, 20):
+        c = 1 << log_c
+        ss = StreamSet()
+        sv, su = ss.create(v, c), ss.create(u, c)
+        runner = HyperstepRunner(
+            lambda a, t: dot(a, t[0], t[1]),
+            [sv, su], device=jax.devices()[0])
+        out = runner.run(jnp.float32(0))
+        assert abs(float(out) - float(np.dot(v, u))) < 1e2
+        measured = runner.total_seconds
+        # Eq. 1 with the Fig.-4 link model: each hyperstep fetches 2 tokens of
+        # C words (t0 + C/BW each) overlapped-with/serialised-against 2C FLOPs
+        # of compute, plus the calibrated per-hyperstep barrier l.
+        n_h = n // c
+        fetch_s = 2 * (t0 + c / bw_words)
+        comp_s = 2 * c / acc.r
+        predicted = n_h * (max(comp_s, fetch_s)
+                           + acc.flops_to_seconds(acc.l)) + fetch_s
+        rows.append((f"inprod_C{c}_us", measured * 1e6, "measured"))
+        rows.append((f"inprod_C{c}_pred_over_meas", predicted / measured,
+                     "Eq.1+Fig4 link model"))
+
+    # overlap check: prefetch=True total <= serial total (Fig. 1's claim)
+    c = 1 << 16
+    dev = jax.devices()[0]
+    ss = StreamSet()
+    r1 = HyperstepRunner(
+        lambda a, t: dot(a, t[0], t[1]),
+        [ss.create(v, c), ss.create(u, c)], prefetch=True, device=dev)
+    r1.run(jnp.float32(0))
+    ss2 = StreamSet()
+    r2 = HyperstepRunner(
+        lambda a, t: dot(a, t[0], t[1]),
+        [ss2.create(v, c), ss2.create(u, c)], prefetch=False, device=dev)
+    r2.run(jnp.float32(0))
+    # Fig. 1 overlap needs an independent DMA engine; this container has ONE
+    # core, so >=1 only when fetch releases the GIL long enough — we report
+    # the measured ratio either way (documented in EXPERIMENTS.md).
+    rows.append(("overlap_speedup", r2.total_seconds / max(r1.total_seconds, 1e-9),
+                 "Fig1 (needs parallel fetch hw)"))
+    return rows

@@ -1,0 +1,47 @@
+"""Table 1 analogue: communication speeds to 'shared memory' on this host.
+
+The paper's Table 1 measures per-core read/write MB/s to the Parallella's
+shared DRAM in free vs contested network states. Here: host RAM ↔ jax device
+buffers, single stream (free) vs multi-threaded streams (contested).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+
+import jax
+import numpy as np
+
+
+def _bw(fn, nbytes: int, repeats: int = 3) -> float:
+    fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return nbytes / np.median(ts) / 1e6  # MB/s
+
+
+def run() -> list[tuple[str, float, str]]:
+    n = 1 << 24  # 16M floats = 64 MB
+    host = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    dev = jax.device_put(host)
+    jax.block_until_ready(dev)
+    rows = []
+
+    read = lambda: np.asarray(dev)                        # device -> host
+    write = lambda: jax.block_until_ready(jax.device_put(host))
+    rows.append(("mem_read_free_MBps", _bw(read, 4 * n), "Table1.read.free"))
+    rows.append(("mem_write_free_MBps", _bw(write, 4 * n), "Table1.write.free"))
+
+    def contested(op, workers=4):
+        def run_all():
+            with cf.ThreadPoolExecutor(workers) as ex:
+                list(ex.map(lambda _: op(), range(workers)))
+        return _bw(run_all, 4 * n * workers) / workers    # per-stream speed
+
+    rows.append(("mem_read_contested_MBps", contested(read), "Table1.read.contested"))
+    rows.append(("mem_write_contested_MBps", contested(write), "Table1.write.contested"))
+    return rows

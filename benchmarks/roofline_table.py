@@ -1,0 +1,37 @@
+"""Roofline table: per (arch × shape) BSPS three-term costs from the dry-run.
+
+Reads ``results/dryrun_baseline.jsonl`` (produced by ``repro.launch.dryrun``)
+and prints the §Roofline table — compute/memory/collective seconds, dominant
+term, useful-FLOPs ratio and roofline fraction. This consumes recorded
+artifacts; it does not compile anything itself.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun_baseline.jsonl")
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = [json.loads(line) for line in open(path)]
+    return [r for r in recs if "roofline" in r]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    for r in load():
+        rf = r["roofline"]
+        cell = f"{r['arch']}/{r['shape']}"
+        derived = (f"{rf['dominant']}-bound c={rf['compute_s']:.4f}s "
+                   f"m={rf['memory_s']:.4f}s n={rf['collective_s']:.4f}s "
+                   f"useful={rf['useful_ratio']:.3f} "
+                   f"peak={rf['peak_device_gb']:.1f}GB")
+        rows.append((f"roofline_{cell}", rf["roofline_frac"], derived))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     "run repro.launch.dryrun --roofline first"))
+    return rows

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure (+ the roofline).
+
+Prints ``name,value,derived`` CSV per the repo convention. Modules:
+  mem_speeds       — paper Table 1 (memory speeds, free vs contested)
+  transfer_curve   — paper Figure 4 (speed vs message size)
+  inner_product    — paper §3.1 (Eq. 1 prediction vs measurement)
+  cannon_crossover — paper Figure 5 / Eq. 2 (runtime prediction + k_equal)
+  roofline_table   — assignment §Roofline (from recorded dry-run artifacts)
+
+Select a subset: ``python -m benchmarks.run cannon_crossover``.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    cannon_crossover,
+    inner_product,
+    mem_speeds,
+    roofline_table,
+    transfer_curve,
+)
+
+MODULES = {
+    "mem_speeds": mem_speeds,
+    "transfer_curve": transfer_curve,
+    "inner_product": inner_product,
+    "cannon_crossover": cannon_crossover,
+    "roofline_table": roofline_table,
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(MODULES)
+    print("name,value,derived")
+    failed = []
+    for name in picks:
+        try:
+            for row in MODULES[name].run():
+                print(f"{row[0]},{row[1]:.6g},{row[2]}", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Figure 4 analogue: external-memory transfer speed vs message size.
+
+The paper's Fig. 4 shows read/write MB/s to external memory growing with
+message size (fixed startup overhead amortised) — the reason tokens should be
+as large as local memory allows. Same curve for this host's RAM→device link.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for log2 in range(10, 25, 2):  # 1 kB .. 16 MB payloads (f32 words)
+        n = (1 << log2) // 4
+        host = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+        jax.block_until_ready(jax.device_put(host))  # warm
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.device_put(host))
+            ts.append(time.perf_counter() - t0)
+        mbps = (4 * n) / np.median(ts) / 1e6
+        rows.append((f"write_{1 << log2}B_MBps", mbps, "Fig4.write"))
+    return rows

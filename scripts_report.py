@@ -1,0 +1,79 @@
+"""Generate EXPERIMENTS.md tables from results/dryrun_baseline.jsonl (+ hillclimb).
+
+Usage: PYTHONPATH=src python scripts_report.py [results/dryrun_baseline.jsonl]
+Prints markdown for §Dry-run and §Roofline.
+"""
+
+import json
+import sys
+from collections import defaultdict
+
+import os
+paths = sys.argv[1:] or [p for p in
+         ("results/dryrun_baseline.jsonl", "results/dryrun_fused.jsonl")
+         if os.path.exists(p)]
+recs = [json.loads(l) for p in paths for l in open(p)]
+
+# dedup: keep the last record per (arch, shape, mesh, tag)
+latest = {}
+for r in recs:
+    latest[(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))] = r
+recs = [r for k, r in sorted(latest.items()) if k[3].startswith("baseline")]
+
+print("### §Dry-run — lower+compile for every (arch × shape × mesh)\n")
+print("| arch | shape | mesh | peak GB/dev | HLO GFLOP/dev (scanned) | "
+      "coll MB/dev | collective ops | compile s |")
+print("|---|---|---|---|---|---|---|---|")
+for r in recs:
+    f = r["full"]
+    ops = " ".join(f"{k.split('-')[0] if False else k}:{v}"
+                   for k, v in sorted(f.get("coll_ops", {}).items()))
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+          f"{f['peak_bytes'] / 1e9:.2f} | {f['flops'] / 1e9:.1f} | "
+          f"{f['coll_bytes'] / 1e6:.1f} | {ops} | {r['compile_s']} |")
+
+print("\n### §Roofline — corrected three-term costs (single-pod, 256 chips)\n")
+print("| arch | shape | compute s | memory s (raw / fused) | collective s | "
+      "dominant (fused) | MODEL GFLOP | useful ratio | roofline frac (fused) |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in recs:
+    rf = r.get("roofline")
+    if not rf:
+        continue
+    mf = rf.get("memory_fused_s", rf["memory_s"])
+    df = rf.get("dominant_fused", rf["dominant"])
+    ff = rf.get("roofline_frac_fused", rf["roofline_frac"])
+    print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+          f"{rf['memory_s']:.3f} / {mf:.3f} | {rf['collective_s']:.4f} | "
+          f"{df} | {rf['model_gflops']:.0f} | "
+          f"{rf['useful_ratio']:.3f} | {ff:.4f} |")
+
+import os
+if os.path.exists("results/hillclimb.jsonl"):
+    print("\n### §Perf — hillclimb iterations\n")
+    print("| cell | tag | compute s | memory raw/fused s | collective s | "
+          "useful | frac (fused) | peak GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for line in open("results/hillclimb.jsonl"):
+        h = json.loads(line)
+        rf = h.get("roofline")
+        if not rf:
+            continue
+        mf = rf.get("memory_fused_s", rf["memory_s"])
+        ff = rf.get("roofline_frac_fused", rf["roofline_frac"])
+        print(f"| {h['arch']}/{h['shape']} | {h['tag']} | {rf['compute_s']:.4f} | "
+              f"{rf['memory_s']:.3f}/{mf:.3f} | {rf['collective_s']:.4f} | "
+              f"{rf['useful_ratio']:.3f} | {ff:.4f} | {rf['peak_device_gb']:.1f} |")
+
+# summary stats
+doms = defaultdict(int)
+for r in recs:
+    if r.get("roofline"):
+        doms[r["roofline"].get("dominant_fused", r["roofline"]["dominant"])] += 1
+print(f"\nDominant-term histogram: {dict(doms)}")
+cells = {(r['arch'], r['shape']) for r in recs}
+meshes = defaultdict(set)
+for r in recs:
+    meshes[(r['arch'], r['shape'])].add(r['mesh'])
+both = sum(1 for v in meshes.values() if len(v) == 2)
+print(f"Cells compiled: {len(cells)} (both meshes: {both})")

@@ -1,0 +1,9 @@
+"""repro — Bulk-Synchronous Pseudo-Streaming (BSPS) framework for TPU pods.
+
+Reproduction + scale-up of Buurlage, Bannink & Wits (2016): the BSP
+accelerator model, pseudo-streams/hypersteps, the BSPS cost function, and a
+production JAX training/serving stack (10 architectures, multi-pod sharding,
+Pallas kernels) built on top of it. See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workloads.
+
+``get_config(name)`` returns the exact published config; ``get_config(name,
+smoke=True)`` returns the reduced same-family config used by CPU smoke tests.
+"""
+
+from repro.configs.base import (
+    SHAPES,
+    Block,
+    ModelConfig,
+    ShapeSpec,
+    applicable_shapes,
+    get_config,
+    list_configs,
+)
+
+# Import order = registry order. Each module registers (full, smoke).
+from repro.configs import (  # noqa: F401  isort: skip
+    xlstm_1_3b,
+    jamba_v0_1_52b,
+    qwen2_vl_7b,
+    codeqwen1_5_7b,
+    minicpm_2b,
+    starcoder2_15b,
+    nemotron_4_340b,
+    moonshot_v1_16b_a3b,
+    qwen2_moe_a2_7b,
+    musicgen_large,
+)
+
+ARCHS = list_configs()
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "Block",
+    "ModelConfig",
+    "ShapeSpec",
+    "applicable_shapes",
+    "get_config",
+    "list_configs",
+]

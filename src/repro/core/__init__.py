@@ -1,0 +1,32 @@
+"""The paper's contribution: BSP accelerator model, pseudo-streams, hypersteps,
+BSPS cost function, and the pod-level three-term roofline generalisation."""
+
+from repro.core.bsp import (
+    BSPAccelerator,
+    BSPComputer,
+    EPIPHANY_III,
+    TPU_V5E_CHIP,
+    TPU_V5E_POD,
+)
+from repro.core.cost import (
+    HyperstepCost,
+    SuperstepCost,
+    bsp_cost,
+    bsps_cost,
+    cannon_bsp_cost,
+    cannon_bsps_cost,
+    cannon_k_equal,
+    inner_product_cost,
+)
+from repro.core.hyperstep import HyperstepRecord, HyperstepRunner, run_bsps
+from repro.core.roofline import TPU_V5E, HardwareSpec, RooflineReport, analyze
+from repro.core.stream import Stream, StreamSet
+
+__all__ = [
+    "BSPAccelerator", "BSPComputer", "EPIPHANY_III", "TPU_V5E_CHIP", "TPU_V5E_POD",
+    "HyperstepCost", "SuperstepCost", "bsp_cost", "bsps_cost",
+    "cannon_bsp_cost", "cannon_bsps_cost", "cannon_k_equal", "inner_product_cost",
+    "HyperstepRecord", "HyperstepRunner", "run_bsps",
+    "TPU_V5E", "HardwareSpec", "RooflineReport", "analyze",
+    "Stream", "StreamSet",
+]

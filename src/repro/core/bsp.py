@@ -1,0 +1,180 @@
+"""BSP computer and BSP accelerator parameter packs (paper §1–2).
+
+The paper defines:
+  * a BSP computer by ``(p, g, l, r)`` — processors, inverse network bandwidth
+    (FLOPs/word), synchronisation latency (FLOPs), compute rate (FLOP/s);
+  * a **BSP accelerator** by ``(p, r, g, l, e, L, E)`` — adding ``e``, the inverse
+    bandwidth to a shared external memory pool (FLOPs/word), local memory ``L``
+    (words) and external memory ``E`` (words).
+
+All ``g``/``l``/``e`` values are in FLOPs (per data word where applicable), so costs
+computed from them are hardware-independent; divide by ``r`` for seconds.
+
+Presets are provided for the paper's own hardware (Epiphany-III on the Parallella,
+the measured values of §5) and for the TPU v5e targets of this repo at the two
+nesting levels described in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "BSPComputer",
+    "BSPAccelerator",
+    "EPIPHANY_III",
+    "TPU_V5E_CHIP",
+    "TPU_V5E_POD",
+    "WORD_BYTES",
+]
+
+# The paper sets one data word = one float (4 bytes on Epiphany). For TPU presets we
+# use bf16 words = 2 bytes; presets carry their own word size.
+WORD_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class BSPComputer:
+    """Classic BSP machine ``(p, g, l, r)``.
+
+    g and l are measured in FLOPs (g per data word), r in FLOP/s per processor.
+    """
+
+    p: int
+    g: float
+    l: float
+    r: float
+    word_bytes: int = WORD_BYTES
+    name: str = "bsp"
+
+    def __post_init__(self) -> None:
+        if self.p <= 0:
+            raise ValueError(f"p must be positive, got {self.p}")
+        if self.g < 0 or self.l < 0 or self.r <= 0:
+            raise ValueError("g, l must be >= 0 and r > 0")
+
+    def flops_to_seconds(self, flops: float) -> float:
+        return flops / self.r
+
+    def seconds_to_flops(self, seconds: float) -> float:
+        return seconds * self.r
+
+
+@dataclasses.dataclass(frozen=True)
+class BSPAccelerator(BSPComputer):
+    """BSP accelerator ``(p, r, g, l, e, L, E)`` (paper §2).
+
+    e : inverse bandwidth to the shared external memory pool, FLOPs per word.
+    L : local (scratchpad) memory per core, in words. Prefetching (double
+        buffering) halves the *effective* local memory — see
+        :meth:`effective_local_words`.
+    E : external memory pool size, in words.
+    """
+
+    e: float = 0.0
+    L: int = 0
+    E: int = 0
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.e < 0:
+            raise ValueError(f"e must be >= 0, got {self.e}")
+        if self.L <= 0 or self.E <= 0:
+            raise ValueError("L and E must be positive (words)")
+        if self.E < self.L:
+            raise ValueError("external memory E must be >= local memory L")
+
+    # -- derived quantities -------------------------------------------------
+
+    def effective_local_words(self, prefetch: bool = True) -> int:
+        """Usable words of local memory per core.
+
+        The paper (§2, Hypersteps): "prefetching data halves the effective local
+        memory size, since storage needs to be reserved for the buffer that holds
+        the next token."
+        """
+        return self.L // 2 if prefetch else self.L
+
+    def max_token_words(self, n_streams_per_core: int = 1, prefetch: bool = True) -> int:
+        """Largest token size C (words) so n open streams fit per core."""
+        if n_streams_per_core <= 0:
+            raise ValueError("need at least one stream")
+        return self.effective_local_words(prefetch) // n_streams_per_core
+
+    def external_read_seconds(self, words: float) -> float:
+        """Wall time to stream ``words`` from external memory into one core."""
+        return self.flops_to_seconds(self.e * words)
+
+    @property
+    def balance(self) -> float:
+        """FLOPs a core can execute in the time one external word arrives (= e).
+
+        The paper's bandwidth-heavy criterion for the inner product is ``e > 1``:
+        below one FLOP per streamed word the link, not the core, is the bottleneck.
+        """
+        return self.e
+
+
+def _epiphany() -> BSPAccelerator:
+    # Paper §5: 600 MHz, ~1 FLOP / 5 cycles for compiled BSPS code;
+    # e ≈ 43.4 FLOP/float (11 MB/s contested DMA read), g ≈ 5.59, l ≈ 136.
+    # L = 32 kB SRAM, E = 32 MB shared DRAM; single-precision words (4 B).
+    r = 600e6 / 5.0
+    return BSPAccelerator(
+        p=16, g=5.59, l=136.0, r=r, e=43.4,
+        L=32 * 1024 // 4, E=32 * 1024 * 1024 // 4,
+        word_bytes=4, name="epiphany-iii",
+    )
+
+
+def _v5e_chip() -> BSPAccelerator:
+    """A single TPU v5e chip viewed as a BSP accelerator (DESIGN.md level 1).
+
+    cores = 1 MXU complex; local memory = VMEM (128 MiB); external = HBM (16 GiB);
+    e = peak FLOP/s / HBM words/s, i.e. FLOPs of compute one bf16 word of HBM
+    bandwidth buys. g/l model intra-chip (no network): ~0.
+    """
+    r = 197e12
+    word = 2  # bf16
+    hbm_words_per_s = 819e9 / word
+    return BSPAccelerator(
+        p=1, g=0.0, l=0.0, r=r, e=r / hbm_words_per_s,  # ≈ 481 FLOP/word
+        L=128 * 1024 * 1024 // word, E=16 * 1024**3 // word,
+        word_bytes=word, name="tpu-v5e-chip",
+    )
+
+
+def _v5e_pod(chips: int = 256, ici_links: int = 2) -> BSPAccelerator:
+    """A v5e pod slice viewed as a BSP accelerator (DESIGN.md level 2).
+
+    cores = chips; local = per-chip HBM; external = the rest of the system
+    (host/DCN), e set from ICI (~50 GB/s/link) as the off-chip word cost;
+    g from ICI as well (inter-core = inter-chip), l ≈ all-reduce latency.
+    """
+    r = 197e12
+    word = 2
+    ici_words_per_s = ici_links * 50e9 / word
+    return BSPAccelerator(
+        p=chips, g=r / ici_words_per_s, l=2e-6 * r,  # ~2 us barrier
+        r=r, e=r / ici_words_per_s,
+        L=16 * 1024**3 // word, E=chips * 16 * 1024**3 // word,
+        word_bytes=word, name=f"tpu-v5e-pod{chips}",
+    )
+
+
+EPIPHANY_III = _epiphany()
+TPU_V5E_CHIP = _v5e_chip()
+TPU_V5E_POD = _v5e_pod()
+
+
+def cyclic_owner(i: int, p: int) -> int:
+    """Owner core of component i under the paper's cyclic distribution (§3.1)."""
+    return i % p
+
+
+def tokens_for(total_words: int, token_words: int) -> int:
+    """Number of tokens a stream of ``total_words`` splits into (last may be short)."""
+    if token_words <= 0:
+        raise ValueError("token size must be positive")
+    return math.ceil(total_words / token_words)

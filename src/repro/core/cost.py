@@ -1,0 +1,182 @@
+"""BSP and BSPS cost functions (paper §1–3).
+
+BSP cost of a k-superstep program:
+    T = Σ_i ( max_s w_i(s) + g·h_i + l ),   h_i = max_s max(t_i(s), r_i(s))
+
+BSPS cost of an H-hyperstep program (paper Eq. 1):
+    T̃ = Σ_h max( T_h , e · max_s Σ_{i ∈ O_s} C_i )
+
+plus the paper's closed forms:
+    inner product  T = n·max(2C, 2Ce) + p + (p-1)g + l,  n = N/(pC)      (§3.1)
+    Cannon (BSP)   T_cannon = N(2k³ + k²g + l)                            (§3.2)
+    Cannon (BSPS)  T̃_cannon = M³·max( N(2k³ + 2k²g + l), 2k²e )  (Eq. 2)
+
+and the k_equal crossover the paper validates experimentally (Fig. 5).
+
+These are in FLOP units; use :meth:`BSPComputer.flops_to_seconds` for wall time.
+The three-term pod-level generalisation lives in :mod:`repro.core.roofline`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.bsp import BSPAccelerator, BSPComputer
+
+__all__ = [
+    "SuperstepCost",
+    "HyperstepCost",
+    "bsp_cost",
+    "bsps_cost",
+    "inner_product_cost",
+    "cannon_bsp_cost",
+    "cannon_bsps_cost",
+    "cannon_k_equal",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepCost:
+    """One BSP superstep: per-processor work, transmitted and received words."""
+
+    work: Sequence[float]          # w_i(s), FLOPs per processor
+    transmitted: Sequence[float]   # t_i(s), words
+    received: Sequence[float]      # r_i(s), words
+
+    @property
+    def h_relation(self) -> float:
+        return max(max(self.transmitted, default=0.0), max(self.received, default=0.0))
+
+    def cost(self, machine: BSPComputer) -> float:
+        return max(self.work, default=0.0) + machine.g * self.h_relation + machine.l
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperstepCost:
+    """One hyperstep: its BSP program cost and the per-core prefetch volume.
+
+    ``fetch_words[s]`` = Σ_{i ∈ O_s} C_i — total words core s streams down for
+    the *next* hyperstep (paper Eq. 1).
+    """
+
+    bsp_flops: float
+    fetch_words: Sequence[float]
+
+    def fetch_cost(self, acc: BSPAccelerator) -> float:
+        return acc.e * max(self.fetch_words, default=0.0)
+
+    def cost(self, acc: BSPAccelerator) -> float:
+        return max(self.bsp_flops, self.fetch_cost(acc))
+
+    def bandwidth_heavy(self, acc: BSPAccelerator) -> bool:
+        """True if fetching the next tokens dominates (paper §2)."""
+        return self.fetch_cost(acc) > self.bsp_flops
+
+
+def bsp_cost(supersteps: Sequence[SuperstepCost], machine: BSPComputer) -> float:
+    """Total BSP cost T of a program given per-superstep accounting."""
+    return sum(s.cost(machine) for s in supersteps)
+
+
+def bsps_cost(hypersteps: Sequence[HyperstepCost], acc: BSPAccelerator) -> float:
+    """Total BSPS cost T̃ (paper Eq. 1)."""
+    return sum(h.cost(acc) for h in hypersteps)
+
+
+# ---------------------------------------------------------------------------
+# Closed forms from the paper's worked examples
+# ---------------------------------------------------------------------------
+
+
+def inner_product_cost(acc: BSPAccelerator, N: int, C: int) -> float:
+    """BSPS cost of the §3.1 inner product of two N-vectors with token size C.
+
+    T = n·max(2C, 2Ce) + p + (p-1)g + l  with  n = N/(pC) hypersteps.
+    Bandwidth-heavy iff e > 1.
+    """
+    n = math.ceil(N / (acc.p * C))
+    hyper = n * max(2.0 * C, 2.0 * C * acc.e)
+    reduction = acc.p + (acc.p - 1) * acc.g + acc.l
+    return hyper + reduction
+
+
+def cannon_bsp_cost(machine: BSPComputer, N: int, k: int) -> float:
+    """BSP cost of inner-level Cannon on an N×N core grid, k×k inner blocks."""
+    return N * (2.0 * k**3 + k**2 * machine.g + machine.l)
+
+
+def cannon_bsps_cost(acc: BSPAccelerator, n: int, M: int, N: int | None = None) -> float:
+    """BSPS cost of two-level Cannon (paper Eq. 2) for n×n matrices.
+
+    M = outer blocks per dimension, N = core-grid side (default √p),
+    k = n/(N·M) = inner block side. T̃ = M³ · max( N(2k³ + 2k²g + l), 2k²e ).
+    """
+    if N is None:
+        N = int(math.isqrt(acc.p))
+        if N * N != acc.p:
+            raise ValueError(f"p={acc.p} is not a square core grid; pass N explicitly")
+    if n % (N * M) != 0:
+        raise ValueError(f"n={n} must be divisible by N*M={N * M} (paper pads with zeros)")
+    k = n // (N * M)
+    compute = N * (2.0 * k**3 + 2.0 * k**2 * acc.g + acc.l)
+    fetch = 2.0 * k**2 * acc.e
+    return M**3 * max(compute, fetch)
+
+
+def cannon_hyperstep(acc: BSPAccelerator, k: int, N: int) -> HyperstepCost:
+    """One hyperstep of two-level Cannon: inner Cannon + prefetch of 2 k² tokens."""
+    return HyperstepCost(
+        bsp_flops=N * (2.0 * k**3 + 2.0 * k**2 * acc.g + acc.l),
+        fetch_words=[2.0 * k**2] * acc.p,
+    )
+
+
+def cannon_k_equal(acc: BSPAccelerator, N: int | None = None,
+                   k_max: float = 4096.0) -> float:
+    """Inner block size k at which Cannon hypersteps flip bandwidth↔compute heavy.
+
+    Solves N(2k³ + 2k²g + l) = 2k²e (paper Eq. 2, LHS = RHS). The compute side
+    grows ~k³ and the fetch side ~k², so above the *largest* root hypersteps are
+    compute heavy; we return that root — the paper's k_equal (≈8 on Epiphany-III,
+    validated against measurements in Fig. 5).
+
+    Note the diff is not monotone: at very small k the latency term N·l dominates
+    the compute side, so a bandwidth-heavy *window* may exist between two roots
+    (or, with the paper's pessimistic contested-network g = 5.59, no window at
+    all — the window appears with the optimized-write g ≲ 1 the paper measured
+    for core-to-core writes, which Cannon's shifts use). Returns:
+
+    * the largest crossover k, if fetch dominates somewhere in (0, k_max];
+    * 0.0 if compute dominates for every k (never bandwidth heavy);
+    * ``math.inf`` if fetch still dominates at k_max (always bandwidth heavy).
+    """
+    if N is None:
+        N = int(math.isqrt(acc.p))
+
+    def diff(k: float) -> float:
+        compute = N * (2.0 * k**3 + 2.0 * k**2 * acc.g + acc.l)
+        return compute - 2.0 * k**2 * acc.e
+
+    if diff(k_max) < 0:
+        return math.inf
+    # Scan down from k_max for the largest sign change, then bisect.
+    hi = k_max
+    lo = None
+    k = k_max
+    while k > 1e-3:
+        k *= 0.98
+        if diff(k) < 0:
+            lo = k
+            break
+        hi = k
+    if lo is None:
+        return 0.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if diff(mid) < 0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

@@ -1,0 +1,141 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes accessed but not collective
+traffic, so we parse the (partitioned, post-SPMD) HLO text and sum the operand
+sizes of every collective op:
+
+    all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute
+    (+ their async -start forms; -done forms are skipped to avoid double counting)
+
+This feeds the collective term of the pod-level BSPS/roofline cost
+(:mod:`repro.core.roofline`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["CollectiveStats", "collective_bytes", "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "bf16[256,4096]{1,0}" or "f32[]" — dtype then dims then optional layout.
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# Matches: "<result shape> <collective-name>[-start](<operands...>)".
+_OP_RE = re.compile(
+    r"=\s+(?P<result>\S.*?)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<suffix>-start|-done)?\("
+    r"(?P<args>[^)]*)\)"
+)
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Sum the byte sizes of every typed shape literal appearing in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue  # e.g. token[] / opaque
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStats:
+    """Per-device collective traffic of one HLO module."""
+
+    total_bytes: int
+    by_kind: dict[str, int]
+    op_counts: dict[str, int]
+
+    def __str__(self) -> str:
+        parts = [
+            f"{k}: {self.op_counts[k]} ops, {v / 1e6:.2f} MB"
+            for k, v in sorted(self.by_kind.items())
+        ]
+        return f"collectives {self.total_bytes / 1e6:.2f} MB ({'; '.join(parts)})"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in (post-partitioning) HLO text.
+
+    Operand sizes measure the data each device injects into the interconnect;
+    for in-place-style collectives (all-reduce) this equals the result size, for
+    all-gather it is the local shard (the interconnect moves shard × (n-1) ≈
+    shard × n per device under a ring schedule — we report the operand shard and
+    leave algorithm factors to the roofline layer).
+    """
+    by_kind: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue
+        kind = m.group("op")
+        args = m.group("args")
+        nbytes = parse_shape_bytes(args)
+        if nbytes == 0:
+            # Operand list may carry bare value names (no inline shapes) in some
+            # printouts; fall back to the result shape.
+            nbytes = parse_shape_bytes(m.group("result"))
+        by_kind[kind] += nbytes
+        counts[kind] += 1
+    return CollectiveStats(
+        total_bytes=sum(by_kind.values()),
+        by_kind=dict(by_kind),
+        op_counts=dict(counts),
+    )
+
+
+# Ops whose operand/result traffic survives TPU fusion: everything else
+# (convert/copy/broadcast/select/elementwise/bitcast/tuple plumbing) fuses
+# into its consumer on the real backend. Used for the fusion-adjusted memory
+# term (EXPERIMENTS.md §Roofline): the CPU pipeline fuses far less, so raw
+# "bytes accessed" over-counts HBM traffic several-fold.
+_MATERIAL_OPS = (
+    "fusion", "dot", "convolution", "custom-call",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "reduce", "reduce-window", "sort", "iota", "rng",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_MATERIAL_RE = re.compile(
+    r"=\s+(?P<result>[a-z][a-z0-9]*\[[0-9,]*\][^ ]*(?:, [^)]*?)?)\s+"
+    r"(?P<op>" + "|".join(_MATERIAL_OPS) + r")(?:-start|\b)[^a-z-]"
+)
+
+
+def fused_bytes(hlo_text: str) -> int:
+    """Result-shape bytes of materialising ops only (TPU-fusion emulation).
+
+    Counts each op's result once (operands are some other op's result, so
+    summing results approximates unique-buffer traffic; inputs from
+    parameters are counted via the entry computation's parameter list).
+    """
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _MATERIAL_RE.search(line)
+        if m:
+            total += parse_shape_bytes(m.group("result"))
+    return total

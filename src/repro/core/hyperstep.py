@@ -1,0 +1,184 @@
+"""Hyperstep executor — the BSPS runtime (paper §2, Fig. 1).
+
+A hyperstep is (1) an ordinary BSP program run on the tokens currently resident
+in local memory, concurrent with (2) the asynchronous fetch of the tokens for the
+next hyperstep. A bulk synchronisation separates hypersteps: no core starts
+hyperstep h+1 before every core has its tokens for h+1 resident.
+
+This module realises that schedule at the host/JAX level:
+
+* "local memory" = device buffers; "external memory" = the stream backing store;
+* the async DMA engine = a background prefetch thread (one, like the single DMA
+  engine per Epiphany core) that stages the next tokens while the current
+  compute callable runs;
+* the bulk synchronisation = joining the prefetch future + blocking on the
+  compute result before advancing.
+
+The same schedule appears one level down in ``kernels/`` where Pallas grid
+pipelining overlaps the HBM→VMEM copy of block i+1 with compute on block i.
+
+The executor records per-hyperstep wall times split into compute / fetch so the
+benchmarks can validate the BSPS cost model's ``max(T_h, e·ΣC_i)`` prediction
+(the paper's Fig. 5 methodology).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core.stream import Stream
+
+__all__ = ["HyperstepRecord", "HyperstepRunner", "run_bsps"]
+
+
+@dataclasses.dataclass
+class HyperstepRecord:
+    """Timing of one hyperstep: the two overlapped operations + the step total."""
+
+    index: int
+    compute_seconds: float
+    fetch_seconds: float
+    step_seconds: float
+    fetch_words: int
+
+    @property
+    def bandwidth_heavy(self) -> bool:
+        return self.fetch_seconds > self.compute_seconds
+
+
+def _block(x: Any) -> Any:
+    """Force completion of device work contained in a pytree (bulk sync)."""
+    return jax.block_until_ready(x) if jax.tree_util.tree_leaves(x) else x
+
+
+def _fetch(streams: Sequence[Stream], core: int, device: Any | None) -> list[Any]:
+    """Stage the next token of each open stream into 'local memory'."""
+    toks = []
+    for s in streams:
+        tok = s.move_down(core)
+        if device is not None:
+            tok = jax.device_put(tok, device)
+        toks.append(_block(tok))
+    return toks
+
+
+class HyperstepRunner:
+    """Runs a BSPS program: ``state = step(state, tokens)`` per hyperstep.
+
+    Parameters
+    ----------
+    step:
+        The hyperstep's BSP program. Called with the resident tokens (one per
+        stream, in stream order); should be jitted for realistic overlap.
+    streams:
+        The open streams of this core (``O_s``); all are advanced each
+        hyperstep. Use :meth:`Stream.seek` inside ``on_hyperstep_end`` for the
+        pseudo-streaming access patterns (e.g. Cannon's ``MOVE`` calls).
+    prefetch:
+        If True (default) overlap next-token fetch with current compute — the
+        defining feature of a hyperstep. If False, run serially (reference
+        semantics; used by tests to check prefetching changes timing only).
+    """
+
+    def __init__(
+        self,
+        step: Callable[[Any, Sequence[Any]], Any],
+        streams: Sequence[Stream],
+        *,
+        core: int = 0,
+        prefetch: bool = True,
+        device: Any | None = None,
+        on_hyperstep_end: Callable[[int, Sequence[Stream]], None] | None = None,
+    ) -> None:
+        self._step = step
+        self._streams = list(streams)
+        self._core = core
+        self._prefetch = prefetch
+        self._device = device
+        self._on_end = on_hyperstep_end
+        self.records: list[HyperstepRecord] = []
+        # One background lane, like the single DMA engine per Epiphany core.
+        self._dma = ThreadPoolExecutor(max_workers=1, thread_name_prefix="bsps-dma")
+
+    def run(self, state: Any, num_hypersteps: int | None = None) -> Any:
+        """Execute hypersteps until streams are exhausted (or a fixed count)."""
+        for s in self._streams:
+            s.open(self._core)
+        try:
+            total = num_hypersteps
+            if total is None:
+                total = min(s.num_tokens - s.cursor for s in self._streams)
+            if total <= 0:
+                return state
+
+            # Hyperstep 0's tokens are assumed resident at program start (paper §2).
+            resident = _fetch(self._streams, self._core, self._device)
+            if self._on_end:
+                self._on_end(0, self._streams)
+
+            for h in range(total):
+                t0 = time.perf_counter()
+                last = h == total - 1
+                fut: Future | None = None
+                if not last:
+                    if self._prefetch:
+                        fut = self._dma.submit(
+                            _fetch, self._streams, self._core, self._device
+                        )
+                    else:
+                        t_f = time.perf_counter()
+                        nxt = _fetch(self._streams, self._core, self._device)
+                        fetch_s = time.perf_counter() - t_f
+
+                t_c = time.perf_counter()
+                state = _block(self._step(state, resident))
+                compute_s = time.perf_counter() - t_c
+
+                if not last:
+                    if fut is not None:
+                        t_w = time.perf_counter()
+                        nxt = fut.result()  # bulk synchronisation
+                        fetch_s = compute_s + (time.perf_counter() - t_w)
+                    resident = nxt
+                else:
+                    fetch_s = 0.0
+
+                self.records.append(
+                    HyperstepRecord(
+                        index=h,
+                        compute_seconds=compute_s,
+                        fetch_seconds=fetch_s,
+                        step_seconds=time.perf_counter() - t0,
+                        fetch_words=sum(s.token_words for s in self._streams)
+                        if not last else 0,
+                    )
+                )
+                if self._on_end and not last:
+                    # Cursor adjustments (seek/MOVE) for the *following* fetch.
+                    self._on_end(h + 1, self._streams)
+            return state
+        finally:
+            for s in self._streams:
+                s.close(self._core)
+            self._dma.shutdown(wait=False)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(r.step_seconds for r in self.records)
+
+
+def run_bsps(
+    step: Callable[[Any, Sequence[Any]], Any],
+    streams: Sequence[Stream],
+    state: Any,
+    **kwargs: Any,
+) -> tuple[Any, list[HyperstepRecord]]:
+    """One-shot convenience wrapper around :class:`HyperstepRunner`."""
+    runner = HyperstepRunner(step, streams, **kwargs)
+    out = runner.run(state)
+    return out, runner.records

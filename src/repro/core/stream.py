@@ -1,0 +1,194 @@
+"""Streams and tokens (paper Definition 1 + the §4 BSPlib streaming primitives).
+
+A *stream* is an ordered, finite collection of tokens, each of which fits in the
+local memory of a core. Contrary to classic streaming, BSPS streams are
+*pseudo*-streams: a cursor supports relative :meth:`Stream.seek` (the paper's
+``bsp_stream_seek`` / ``MOVE``), tokens may be revisited or skipped, and streams
+are mutable (``move_up`` writes back).
+
+This module is the host-side / JAX-level realisation: tokens are ``jax.Array`` (or
+numpy) views of a backing array resident in "external memory" (host RAM or HBM,
+depending on nesting level — DESIGN.md §2). The Pallas kernels realise the same
+concept one level down with VMEM block streaming.
+
+Exclusivity (paper §4: "Streams can only be opened if they are not yet opened by
+another core") is enforced by the ``owner`` handle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Stream", "StreamSet", "StreamClosedError", "StreamBusyError"]
+
+
+class StreamClosedError(RuntimeError):
+    pass
+
+
+class StreamBusyError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Stream:
+    """A mutable pseudo-stream over a backing 1-D (or leading-axis) array.
+
+    ``data``        backing array, tokens are equal slices along axis 0
+                    (paper: "tokens of the i-th stream have constant size C_i").
+    ``token_size``  C_i — elements per token along axis 0.
+    ``stream_id``   creation-order id (paper §4).
+    """
+
+    data: Any
+    token_size: int
+    stream_id: int = 0
+    name: str = ""
+
+    _cursor: int = dataclasses.field(default=0, init=False)
+    _owner: int | None = dataclasses.field(default=None, init=False)
+
+    def __post_init__(self) -> None:
+        if self.token_size <= 0:
+            raise ValueError("token_size must be positive")
+        if self.data.shape[0] % self.token_size != 0:
+            raise ValueError(
+                f"stream length {self.data.shape[0]} not divisible by token "
+                f"size {self.token_size}; pad the backing array"
+            )
+
+    # -- BSPlib-extension primitives (paper §4) ------------------------------
+
+    def open(self, core: int) -> int:
+        """``bsp_stream_open`` — returns max token size in *elements*."""
+        if self._owner is not None and self._owner != core:
+            raise StreamBusyError(
+                f"stream {self.stream_id} already opened by core {self._owner}"
+            )
+        self._owner = core
+        return self.token_size
+
+    def close(self, core: int) -> None:
+        """``bsp_stream_close`` — after closing any core can open it again."""
+        self._check_owner(core)
+        self._owner = None
+        self._cursor = 0
+
+    def move_down(self, core: int, preload: bool = True) -> Any:
+        """``bsp_stream_move_down`` — read token at cursor, advance cursor.
+
+        ``preload`` is semantic only at this level (prefetch is modelled in the
+        cost function and realised in :mod:`repro.core.hyperstep`).
+        """
+        self._check_owner(core)
+        if not 0 <= self._cursor < self.num_tokens:
+            raise IndexError(
+                f"stream {self.stream_id}: cursor {self._cursor} out of range "
+                f"[0, {self.num_tokens})"
+            )
+        tok = self.peek(self._cursor)
+        self._cursor += 1
+        return tok
+
+    def move_up(self, core: int, token: Any) -> None:
+        """``bsp_stream_move_up`` — write token at cursor, advance cursor."""
+        self._check_owner(core)
+        lo = self._cursor * self.token_size
+        hi = lo + self.token_size
+        if isinstance(self.data, np.ndarray):
+            self.data[lo:hi] = np.asarray(token)
+        else:  # jax arrays are immutable — functional update
+            self.data = self.data.at[lo:hi].set(token)
+        self._cursor += 1
+
+    def seek(self, core: int, delta_tokens: int) -> None:
+        """``bsp_stream_seek`` — move cursor *relative* (random access)."""
+        self._check_owner(core)
+        new = self._cursor + delta_tokens
+        if not 0 <= new <= self.num_tokens:
+            raise IndexError(f"seek to {new} outside [0, {self.num_tokens}]")
+        self._cursor = new
+
+    # -- inspection ----------------------------------------------------------
+
+    def peek(self, index: int) -> Any:
+        """Random access without cursor motion (tokens may be reused freely)."""
+        lo = index * self.token_size
+        return self.data[lo : lo + self.token_size]
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    @property
+    def num_tokens(self) -> int:
+        return self.data.shape[0] // self.token_size
+
+    @property
+    def token_words(self) -> int:
+        """Words per token (C_i in the cost function): elements × trailing dims."""
+        trailing = int(np.prod(self.data.shape[1:], dtype=np.int64)) if self.data.ndim > 1 else 1
+        return self.token_size * trailing
+
+    @property
+    def exhausted(self) -> bool:
+        return self._cursor >= self.num_tokens
+
+    def _check_owner(self, core: int) -> None:
+        if self._owner is None:
+            raise StreamClosedError(f"stream {self.stream_id} is not open")
+        if self._owner != core:
+            raise StreamBusyError(
+                f"stream {self.stream_id} owned by core {self._owner}, not {core}"
+            )
+
+    def __iter__(self) -> Iterator[Any]:
+        for i in range(self.num_tokens):
+            yield self.peek(i)
+
+
+class StreamSet:
+    """Host-side registry: creation-order ids, one per ``bsp_stream_create``."""
+
+    def __init__(self) -> None:
+        self._streams: list[Stream] = []
+
+    def create(self, data: Any, token_size: int, name: str = "") -> Stream:
+        s = Stream(data=data, token_size=token_size,
+                   stream_id=len(self._streams), name=name)
+        self._streams.append(s)
+        return s
+
+    def create_cyclic(self, vector: Any, p: int, token_size: int,
+                      name: str = "") -> list[Stream]:
+        """Cyclic distribution of a vector into p per-core streams (paper §3.1).
+
+        Component i goes to core ``i mod p``; each core's components are then cut
+        into tokens of ``token_size`` elements (padding with zeros).
+        """
+        n = vector.shape[0]
+        per_core = math.ceil(n / p)
+        per_core = math.ceil(per_core / token_size) * token_size
+        streams = []
+        for s in range(p):
+            idx = np.arange(s, n, p)
+            chunk = np.zeros((per_core,) + tuple(vector.shape[1:]), dtype=vector.dtype)
+            chunk[: len(idx)] = np.asarray(vector)[idx]
+            backing = jnp.asarray(chunk) if isinstance(vector, jax.Array) else chunk
+            streams.append(self.create(backing, token_size, name=f"{name}[{s}]"))
+        return streams
+
+    def __getitem__(self, stream_id: int) -> Stream:
+        return self._streams[stream_id]
+
+    def __len__(self) -> int:
+        return len(self._streams)
+
+    def all(self) -> Sequence[Stream]:
+        return tuple(self._streams)

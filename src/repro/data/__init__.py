@@ -1,0 +1,1 @@
+"""Stream-backed data pipeline (prefetch = host-level hypersteps)."""

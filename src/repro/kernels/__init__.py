@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the BSPS compute hot-spots (paper §3 algorithms).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), a jit'd
+wrapper in ops.py, and a pure-jnp oracle in ref.py. Validated with
+interpret=True on CPU; compiled on TPU.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,66 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas kernels run compiled; elsewhere (this
+container is CPU) they run under ``interpret=True`` — same kernel body,
+executed in Python, used by every test against the ``ref.py`` oracles. Set
+``REPRO_FORCE_REF=1`` to route everything to the oracles (e.g. to bisect a
+kernel bug from a model-level failure), and ``REPRO_FORCE_INTERPRET=1`` to
+force interpret mode even on TPU.
+
+Model code calls these wrappers, never ``pallas_call`` directly, so the
+kernel/oracle swap is a one-line environment change.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+from repro.kernels.streamed_dot import streamed_dot as _dot
+from repro.kernels.streamed_matmul import streamed_matmul as _matmul
+
+__all__ = ["matmul", "dot", "attention", "selective_scan", "use_ref", "interpret_mode"]
+
+
+def use_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def interpret_mode() -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET", "0") == "1":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, *, block_m=256, block_n=256, block_k=256, out_dtype=None):
+    if use_ref():
+        return ref.matmul_ref(a, b, out_dtype=out_dtype)
+    return _matmul(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret_mode(),
+    )
+
+
+def dot(v, u, *, token_size=8 * 1024):
+    if use_ref():
+        return ref.dot_ref(v, u)
+    return _dot(v, u, token_size=token_size, interpret=interpret_mode())
+
+
+def attention(q, k, v, *, causal=True, sm_scale=None, block_q=128, block_kv=128):
+    if use_ref():
+        return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    return _flash(
+        q, k, v, causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_kv=block_kv, interpret=interpret_mode(),
+    )
+
+
+def selective_scan(x, dt, b, c, a, d, *, chunk=128):
+    if use_ref():
+        return ref.ssm_scan_ref(x, dt, b, c, a, d)
+    return _ssm(x, dt, b, c, a, d, chunk=chunk, interpret=interpret_mode())

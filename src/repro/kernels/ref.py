@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function computes the same mathematical result as its kernel twin with no
+blocking, streaming, or online renormalisation — tests assert allclose between
+kernel (interpret=True) and these across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "dot_ref", "attention_ref", "ssm_scan_ref"]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def dot_ref(v: jax.Array, u: jax.Array) -> jax.Array:
+    return jnp.vdot(v.astype(jnp.float32), u.astype(jnp.float32))
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Dense softmax attention with GQA. q: (B,Hq,Sq,D), k/v: (B,Hkv,Skv,D).
+
+    When Sq < Skv the queries are the last Sq positions (decode semantics).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+        k_pos = jnp.arange(skv)[None, :]
+        s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(
+    x: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
+    a: jax.Array, d: jax.Array,
+) -> jax.Array:
+    """Sequential selective scan oracle via lax.scan over time."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    af, df = a.astype(jnp.float32), d.astype(jnp.float32)
+    bsz, seq, d_inner = x.shape
+    d_state = a.shape[1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,di) (B,di) (B,ds) (B,ds)
+        da = jnp.exp(dt_t[..., None] * af)              # (B, di, ds)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, c_t) + df * x_t
+        return h, y
+
+    h0 = jnp.zeros((bsz, d_inner, d_state), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), bf.swapaxes(0, 1), cf.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1).astype(x.dtype)

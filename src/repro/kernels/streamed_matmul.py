@@ -1,0 +1,119 @@
+"""BSPS two-level Cannon matmul, adapted to TPU as a Pallas kernel.
+
+Paper §3.2 computes C = A·B with outer M×M blocks *streamed* from external
+memory and an inner Cannon rotation across the 4×4 core grid. On TPU the two
+levels map as (DESIGN.md §2):
+
+  outer level  — HBM→VMEM block streams. The Pallas grid's K dimension is the
+                 token stream: block (i, j, s) of A/B is the token of hyperstep
+                 s, and Mosaic's automatic grid pipelining double-buffers the
+                 next block's DMA against the current block's MXU compute —
+                 exactly the paper's prefetch-overlapped hyperstep (Fig. 1).
+  inner level  — the Cannon rotation becomes the MXU systolic array itself for
+                 a single chip; the *multi-chip* rotation lives in
+                 :mod:`repro.distributed.cannon` (shard_map + collective_permute).
+
+Token identification: one (block_m × block_k) tile of A + one (block_k ×
+block_n) tile of B form the two tokens resident per hyperstep; the fp32
+accumulator tile is the persistent local state (the paper's C_ij block). Token
+reuse via the stream cursor (`MOVE(Σ, -M)`) corresponds to the non-injective
+BlockSpec index maps: A's tile (i, s) is re-fetched for every j — the paper's
+"loop over groups of M blocks of A a number of M times".
+
+Block sizes default to 128/256 multiples so the MXU (128×128) stays aligned and
+three tiles (+ double buffers) fit in VMEM; see ``vmem_bytes``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["streamed_matmul", "vmem_bytes"]
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, acc_ref, *, n_k: int):
+    """One hyperstep: multiply the resident A/B tokens into the local C block."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        # WRITE(σ_C, Σ_C): stream the finished block up to external memory.
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, itemsize: int = 2) -> int:
+    """Resident VMEM footprint: A,B tokens double-buffered + fp32 accumulator.
+
+    The ×2 on the streamed tokens is the paper's "prefetching halves effective
+    local memory" — Mosaic allocates both pipeline buffers in VMEM.
+    """
+    tokens = (block_m * block_k + block_k * block_n) * itemsize * 2
+    acc = block_m * block_n * 4
+    return tokens + acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+)
+def streamed_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    out_dtype: jnp.dtype | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B with BSPS block streaming. Shapes (m, k) x (k, n) -> (m, n).
+
+    Ragged edges are zero-padded (the paper: "padding with zeros if necessary").
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    out_dtype = out_dtype or a.dtype
+
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+    if pad_m or pad_k:
+        a = jnp.pad(a, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        b = jnp.pad(b, ((0, pad_k), (0, pad_n)))
+    mp, kp = a.shape
+    np_ = b.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),  # Σ^A token (i, s)
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),  # Σ^B token (s, j)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+    if pad_m or pad_n:
+        out = out[:m, :n]
+    return out

@@ -1,0 +1,26 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN §1).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state. Single pod = 16×16 = 256 chips (v5e pod slice);
+multi-pod = 2 pods = 512 chips with the leading ``pod`` axis carrying
+cross-pod data parallelism (DCN-grade link in reality — which is why the
+gradient-compression hooks target that axis).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None) -> Mesh:
+    """A small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    model = model or 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

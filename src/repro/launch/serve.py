@@ -1,0 +1,78 @@
+"""Serving launcher: batched autoregressive decoding with a KV/state cache.
+
+``python -m repro.launch.serve --arch <id> --smoke --batch 4 --steps 32``
+
+Prefill runs once over the prompt (full-sequence forward), then decode steps
+are one hyperstep each: the jitted ``serve_step`` consumes the resident cache
+token (BSPS local state) while the host overlaps sampling of the previous
+step. Greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.train.steps import make_serve_step
+
+
+def generate(cfg, params, prompt_tokens, *, steps: int, temperature: float = 0.0,
+             seed: int = 0):
+    b, s = prompt_tokens.shape
+    max_len = s + steps
+    cache = M.init_cache(cfg, b, max_len)
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    # prefill by stepping the cache through the prompt (teacher forcing)
+    logits = None
+    for t in range(s):
+        logits, cache = serve_step(params, cache, {"tokens": prompt_tokens[:, t:t + 1]})
+
+    key = jax.random.PRNGKey(seed)
+    out = [prompt_tokens]
+    tok = None
+    times = []
+    for t in range(steps):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok.astype(jnp.int32))
+        t0 = time.perf_counter()
+        logits, cache = serve_step(params, cache, {"tokens": tok.astype(jnp.int32)})
+        jax.block_until_ready(logits)
+        times.append(time.perf_counter() - t0)
+    return jnp.concatenate(out, axis=1), times
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    tokens, times = generate(cfg, params, prompt, steps=args.steps,
+                             temperature=args.temperature)
+    import numpy as np
+    print(f"[serve] arch={args.arch} batch={args.batch} generated={args.steps} "
+          f"tok/step p50={np.median(times) * 1e3:.1f}ms "
+          f"throughput={args.batch / np.median(times):.1f} tok/s")
+    print("sample row:", np.asarray(tokens[0])[: args.prompt_len + 8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model substrate: every assigned architecture, built from scratch in JAX."""
+
+from repro.models.model import (
+    abstract_params,
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+
+__all__ = [
+    "abstract_params", "count_params", "decode_step", "forward",
+    "init_cache", "init_params", "loss_fn",
+]

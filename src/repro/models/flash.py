@@ -1,0 +1,234 @@
+"""Portable flash attention with a custom VJP (hillclimb over ``blockwise``).
+
+The baseline ``blockwise_attention`` lets JAX autodiff the KV-chunk scan: the
+(m, l, acc) carries — acc is (B, H, Sq, D) fp32 — are saved at *every* scan
+step for the backward pass, so HBM traffic and live memory scale with
+n_kv_blocks. This module implements the FlashAttention-2 structure instead:
+
+* forward saves only (q, k, v, out, lse) — O(S·d) residuals;
+* backward recomputes the block probabilities from lse in two passes
+  (pass A: dq by scanning KV per Q tile; pass B: dk/dv by scanning Q per KV
+  tile) — no scatter, no saved carries;
+* causal truncation is *structural*: each Q tile's KV scan stops at the
+  diagonal (python-level bound ⇒ the skipped FLOPs leave the HLO, unlike a
+  mask), and pass B starts each KV tile's Q scan at the first intersecting
+  tile.
+
+GQA folds query heads as (Hkv, group); K/V tokens are reused across the group
+(the paper's seek/reuse pattern) without materialising a repeat.
+
+EXPERIMENTS.md §Perf records the before/after of switching the train/prefill
+path from ``blockwise`` to this.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_vjp"]
+
+_NEG = -1e30
+
+
+def _bounds(causal: bool, q_offset: int, tile_end_q: int, n_kv: int,
+            block_kv: int) -> int:
+    """Number of KV blocks a Q tile ending at (global) row tile_end_q needs."""
+    if not causal:
+        return n_kv
+    last_k = q_offset + tile_end_q  # last visible key position + 1
+    return min(n_kv, max(1, math.ceil(last_k / block_kv)))
+
+
+def _fold(q, k, v):
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    return q.reshape(b, hkv, g, sq, d), k, v, (b, hq, hkv, g, sq, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_vjp(
+    q: jax.Array,    # (B, Hq, Sq, D)
+    k: jax.Array,    # (B, Hkv, Skv, D)
+    v: jax.Array,    # (B, Hkv, Skv, D)
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    out, _ = _flash_fwd_inner(q, k, v, causal, q_offset, block_q, block_kv,
+                              unroll)
+    return out
+
+
+def _flash_fwd_inner(q, k, v, causal, q_offset, block_q, block_kv,
+                     unroll=False):
+    qg, k, v, (b, hq, hkv, g, sq, d) = _fold(q, k, v)
+    skv = k.shape[2]
+    scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_kv, skv)
+    # pad KV to block multiple (masked via positions)
+    pad_k = (-skv) % bk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    n_kv = kp.shape[2] // bk
+    kb = kp.reshape(b, hkv, n_kv, bk, d)
+    vb = vp.reshape(b, hkv, n_kv, bk, d)
+
+    outs, lses = [], []
+    for t0 in range(0, sq, bq):
+        tq = min(bq, sq - t0)
+        qt = qg[:, :, :, t0:t0 + tq].astype(jnp.float32) * scale
+        nb = _bounds(causal, q_offset, t0 + tq, n_kv, bk)
+        q_pos = q_offset + t0 + jnp.arange(tq)
+
+        def step(carry, idx):
+            m, l, acc = carry
+            k_blk = kb[:, :, idx].astype(jnp.float32)
+            v_blk = vb[:, :, idx].astype(jnp.float32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt, k_blk)
+            k_pos = idx * bk + jnp.arange(bk)
+            mask = k_pos[None, :] < skv
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = alpha[..., None] * acc + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, tq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, tq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb),
+                                      unroll=nb if unroll else 1)
+        l = jnp.maximum(l, 1e-30)
+        outs.append((acc / l[..., None]))
+        lses.append(m + jnp.log(l))
+
+    out = jnp.concatenate(outs, axis=3).reshape(b, hq, sq, d).astype(q.dtype)
+    lse = jnp.concatenate(lses, axis=3)          # (B, Hkv, g, Sq)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, q_offset, block_q, block_kv, unroll):
+    out, lse = _flash_fwd_inner(q, k, v, causal, q_offset, block_q, block_kv,
+                                unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, block_q, block_kv, unroll, res, dout):
+    q, k, v, out, lse = res
+    qg, kf, vf, (b, hq, hkv, g, sq, d) = _fold(q, k, v)
+    skv = kf.shape[2]
+    scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_kv, skv)
+    pad_k = (-skv) % bk
+    kp = jnp.pad(kf, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else kf
+    vp = jnp.pad(vf, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else vf
+    n_kv = kp.shape[2] // bk
+    kb = kp.reshape(b, hkv, n_kv, bk, d)
+    vb = vp.reshape(b, hkv, n_kv, bk, d)
+
+    og = out.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    dog = dout.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    delta = jnp.sum(og * dog, axis=-1)           # (B,hkv,g,Sq)
+
+    # ---- pass A: dq, scanning KV blocks per Q tile --------------------------
+    dqs = []
+    for t0 in range(0, sq, bq):
+        tq = min(bq, sq - t0)
+        qt = qg[:, :, :, t0:t0 + tq].astype(jnp.float32)
+        lt = lse[:, :, :, t0:t0 + tq]
+        dt = delta[:, :, :, t0:t0 + tq]
+        dot_ = dog[:, :, :, t0:t0 + tq]
+        nb = _bounds(causal, q_offset, t0 + tq, n_kv, bk)
+        q_pos = q_offset + t0 + jnp.arange(tq)
+
+        def stepA(dq_acc, idx):
+            k_blk = kb[:, :, idx].astype(jnp.float32)
+            v_blk = vb[:, :, idx].astype(jnp.float32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt, k_blk) * scale
+            k_pos = idx * bk + jnp.arange(bk)
+            mask = k_pos[None, :] < skv
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lt[..., None]), 0.0)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dot_, v_blk)
+            ds = p * (dp - dt[..., None]) * scale
+            return dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_blk), None
+
+        dq0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+        dq_t, _ = jax.lax.scan(stepA, dq0, jnp.arange(nb),
+                               unroll=nb if unroll else 1)
+        dqs.append(dq_t)
+    dq = jnp.concatenate(dqs, axis=3).reshape(b, hq, sq, d).astype(q.dtype)
+
+    # ---- pass B: dk/dv, scanning Q tiles per KV block -----------------------
+    n_q = math.ceil(sq / bq)
+    # pad q-side tensors to tile multiple for a uniform scan
+    pad_q = n_q * bq - sq
+    def padq(t):
+        return jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad_q)) + ((0, 0),) * (t.ndim - 4)) if pad_q else t
+    qp = padq(qg.astype(jnp.float32))
+    lp = padq(lse)
+    dp_ = padq(delta)
+    dop = padq(dog)
+    qtiles = qp.reshape(b, hkv, g, n_q, bq, d)
+    ltiles = lp.reshape(b, hkv, g, n_q, bq)
+    dtiles = dp_.reshape(b, hkv, g, n_q, bq)
+    dotiles = dop.reshape(b, hkv, g, n_q, bq, d)
+
+    dks, dvs = [], []
+    for j in range(n_kv):
+        k_blk = kb[:, :, j].astype(jnp.float32)
+        v_blk = vb[:, :, j].astype(jnp.float32)
+        k_pos = j * bk + jnp.arange(bk)
+        # first Q tile that can see this KV block
+        first = 0
+        if causal:
+            first = max(0, (j * bk - q_offset) // bq)
+        idxs = jnp.arange(first, n_q)
+
+        def stepB(carry, ti):
+            dk_acc, dv_acc = carry
+            qt = qtiles[:, :, :, ti]
+            lt = ltiles[:, :, :, ti]
+            dt = dtiles[:, :, :, ti]
+            dot_ = dotiles[:, :, :, ti]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt, k_blk) * scale
+            q_pos = q_offset + ti * bq + jnp.arange(bq)
+            mask = (k_pos[None, :] < skv) & (q_pos[:, None] < q_offset + sq)
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lt[..., None]), 0.0)
+            dv_acc = dv_acc + jnp.einsum("bhgqk,bhgqd->bhkd", p, dot_)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dot_, v_blk)
+            ds = p * (dp - dt[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qt)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, hkv, bk, d), jnp.float32)
+        (dk_j, dv_j), _ = jax.lax.scan(stepB, (z, z), idxs,
+                                       unroll=len(idxs) if unroll else 1)
+        dks.append(dk_j)
+        dvs.append(dv_j)
+
+    dk = jnp.concatenate(dks, axis=2)[:, :, :skv].astype(k.dtype)
+    dv = jnp.concatenate(dvs, axis=2)[:, :, :skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_vjp.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,160 @@
+"""Top-level LM: init, forward, loss, decode — the public model API.
+
+``init_params`` is jittable so the dry-run can ``jax.eval_shape`` it (no host
+allocation for 340B configs). VLM/audio archs accept precomputed frontend
+embeddings (the assignment's stub) through ``embeds=``; LM archs take token
+ids. Position ids are synthesised when not provided (M-RoPE text mode: all
+three axes equal).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import transformer as tf
+from repro.models.layers import (
+    apply_norm,
+    embed_tokens,
+    init_embedding,
+    init_norm,
+    lm_head,
+    sinusoidal_positions,
+)
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": init_embedding(cfg, k1, dtype),
+        "stack": tf.init_stack(cfg, k2, dtype),
+        "final_norm": init_norm(cfg, dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree of the parameters (dry-run, no allocation)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    shapes = abstract_params(cfg)
+    return sum(int(jnp.prod(jnp.array(x.shape))) if x.shape else 1
+               for x in jax.tree_util.tree_leaves(shapes))
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int) -> jax.Array:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    if cfg.rope_type == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array | None = None,
+    *,
+    embeds: jax.Array | None = None,
+    positions: jax.Array | None = None,
+    unroll_time: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V), moe_aux)."""
+    if (tokens is None) == (embeds is None):
+        raise ValueError("pass exactly one of tokens / embeds")
+    if embeds is None:
+        x = embed_tokens(params["embed"], tokens)
+    else:
+        x = embeds.astype(_dtype(cfg))
+    x = ctx.constrain(x, ctx.DP, None, None)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    if cfg.rope_type == "sinusoidal":
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        x = x + sinusoidal_positions(cfg.d_model, pos2d).astype(x.dtype)
+    x, aux = tf.apply_stack(cfg, params["stack"], x, positions,
+                            unroll_time=unroll_time)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    return logits, aux
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array | None,
+    labels: jax.Array,
+    *,
+    embeds: jax.Array | None = None,
+    positions: jax.Array | None = None,
+    aux_weight: float = 0.01,
+    unroll_time: bool = False,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Causal-LM cross entropy (+ MoE aux). labels = next-token ids, -1 = pad."""
+    logits, aux = forward(cfg, params, tokens, embeds=embeds,
+                          positions=positions, unroll_time=unroll_time)
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    # CE via logsumexp − one-hot contraction: stays local under a vocab-sharded
+    # lm head (take_along_axis would force an all-gather of the logits).
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    true_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - true_logit
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0).sum() / denom
+    total = ce + aux_weight * aux
+    return total, {"loss": total, "ce": ce, "moe_aux": aux}
+
+
+# -- decoding -------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return {
+        "layers": tf.init_stack_cache(cfg, batch, max_len, _dtype(cfg)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    tokens: jax.Array | None = None,     # (B, 1) int32
+    *,
+    embeds: jax.Array | None = None,     # (B, 1, d) for vlm/audio stubs
+    unroll_time: bool = False,
+) -> tuple[jax.Array, Params]:
+    """One serve step: logits for the next token + updated cache."""
+    if (tokens is None) == (embeds is None):
+        raise ValueError("pass exactly one of tokens / embeds")
+    if embeds is None:
+        x = embed_tokens(params["embed"], tokens)
+    else:
+        x = embeds.astype(_dtype(cfg))
+    if cfg.rope_type == "sinusoidal":
+        pos = jnp.broadcast_to(cache["len"][None, None], (x.shape[0], 1))
+        x = x + sinusoidal_positions(cfg.d_model, pos).astype(x.dtype)
+    x, new_layers = tf.apply_stack_decode(
+        cfg, params["stack"], cache["layers"], x, cache["len"],
+        unroll_time=unroll_time,
+    )
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits, {"layers": new_layers, "len": cache["len"] + 1}

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts MLP with sort-based dispatch (GShard/Switch semantics).
+
+BSPS reading (DESIGN.md §4): expert weights are stream tokens resident in
+"external memory" (other chips' HBM under expert parallelism); the dispatch
+all-to-all is the hyperstep's token fetch. The dense compute
+``einsum('ecd,edf->ecf')`` shards experts over the ``model`` mesh axis (EP) —
+see :mod:`repro.distributed.sharding`.
+
+Dispatch: tokens pick top-k experts; tokens are sorted by expert id, each
+expert processes up to ``capacity = ceil(T·k/E · capacity_factor)`` tokens
+(overflow dropped — standard GShard behaviour), results are scattered back
+with router-probability weighting. Shared experts (qwen/moonlight style) run
+densely on every token. An auxiliary load-balancing loss (Switch §4) is
+returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d, e, ff = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    gated = cfg.mlp_activation in ("swiglu", "geglu")
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "w_up": _dense_init(ks[1], (e, d, ff), dtype, scale_axis=1),
+        "w_down": _dense_init(ks[2], (e, ff, d), dtype, scale_axis=1),
+    }
+    if gated:
+        p["w_gate"] = _dense_init(ks[3], (e, d, ff), dtype, scale_axis=1)
+    if cfg.moe_shared_experts:
+        sff = cfg.moe_shared_experts * ff
+        p["shared_up"] = _dense_init(ks[4], (d, sff), dtype)
+        p["shared_down"] = _dense_init(ks[5], (sff, d), dtype)
+        if gated:
+            p["shared_gate"] = _dense_init(ks[3], (d, sff), dtype)
+    return p
+
+
+def _act(cfg: ModelConfig, p: Params, x: jax.Array, prefix: str,
+         spec: str) -> jax.Array:
+    """Expert MLP body for either the routed (e…) or shared (no e) weights."""
+    up = jnp.einsum(spec, x, p[f"{prefix}up"])
+    if cfg.mlp_activation in ("swiglu", "geglu"):
+        g = jnp.einsum(spec, x, p[f"{prefix}gate"])
+        act = jax.nn.silu if cfg.mlp_activation == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        return act(g) * up
+    if cfg.mlp_activation == "gelu":
+        return jax.nn.gelu(up, approximate=True)
+    r = jax.nn.relu(up)
+    return r * r  # squared_relu
+
+
+def _dispatch_group(cfg: ModelConfig, router, x_g: jax.Array, capacity: int):
+    """Per-DP-group top-k dispatch: (T, d) -> (buf (E, cap, d), combine meta).
+
+    Runs vmapped over the DP groups, so the argsort/scatter stay local to each
+    group's token shard — the global cross-device movement is only the
+    buf resharding (the MoE all-to-all) applied by the caller's constraint.
+    """
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    t, d = x_g.shape
+    logits = jnp.einsum("td,de->te", x_g.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    aux = e * jnp.sum((counts / (t * k)) * probs.mean(0))
+
+    flat_e = top_e.reshape(-1)
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, st = flat_e[order], flat_w[order], flat_t[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    rank = jnp.arange(t * k) - group_start[se]
+    keep = rank < capacity
+    slot = se * capacity + jnp.where(keep, rank, capacity - 1)
+    buf = jnp.zeros((e * capacity, d), x_g.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], x_g[st], 0))
+    return buf.reshape(e, capacity, d), (slot, st, sw, keep), aux
+
+
+def moe_forward(
+    cfg: ModelConfig, p: Params, x: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Top-k routed + shared experts.
+
+    Dispatch is vmapped over ``G`` data-parallel groups (G = registered DP
+    mesh size when it divides B, else 1): routing/sort/scatter are local per
+    group; the dispatched buffer is then constrained to expert-parallel
+    sharding, which is exactly the MoE all-to-all. Overflow beyond per-group
+    capacity is dropped (GShard semantics).
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    g = ctx.dp_size()
+    if g <= 1 or b % g != 0:
+        g = 1
+    t_local = (b // g) * s
+    xg = x.reshape(g, t_local, d)
+    xg = ctx.constrain(xg, ctx.DP, None, None)
+
+    capacity = max(1, int(math.ceil(t_local * k / e * cfg.moe_capacity_factor)))
+
+    buf, (slot, st, sw, keep), aux = jax.vmap(
+        lambda xx: _dispatch_group(cfg, p["router"], xx, capacity)
+    )(xg)
+    # the MoE all-to-all: (G, E, cap, d) from DP-sharded tokens to EP experts
+    buf = ctx.constrain(buf, ctx.DP, ctx.TP, None, None)
+
+    h = _act(cfg, p, buf, "w_", "gecd,edf->gecf")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out_e = ctx.constrain(out_e, ctx.DP, ctx.TP, None, None)
+    out_e = out_e.reshape(g, e * capacity, d)
+
+    def _combine(out_g, slot_g, st_g, sw_g, keep_g):
+        contrib = jnp.where(keep_g[:, None], out_g[slot_g] * sw_g[:, None], 0)
+        return jnp.zeros((t_local, d), x.dtype).at[st_g].add(
+            contrib.astype(x.dtype))
+
+    y = jax.vmap(_combine)(out_e, slot, st, sw, keep)
+    y = y.reshape(b, s, d)
+
+    if cfg.moe_shared_experts:
+        xt = x.reshape(b * s, d)
+        y = y + jnp.einsum(
+            "tf,fd->td", _act(cfg, p, xt, "shared_", "td,df->tf"), p["shared_down"]
+        ).astype(x.dtype).reshape(b, s, d)
+    return y, aux.mean()
+
+
+def moe_forward_dense(
+    cfg: ModelConfig, p: Params, x: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle: every expert on every token, masked combine (tests only)."""
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    combine = jnp.zeros_like(probs)
+    for i in range(k):
+        combine = combine.at[jnp.arange(xt.shape[0]), top_e[:, i]].add(top_p[:, i])
+    h = _act(cfg, p, xt[None].repeat(e, 0), "w_", "etd,edf->etf")
+    out_e = jnp.einsum("etf,efd->etd", h, p["w_down"])
+    y = jnp.einsum("etd,te->td", out_e.astype(jnp.float32), combine).astype(x.dtype)
+    counts = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    aux = e * jnp.sum((counts / (xt.shape[0] * k)) * probs.mean(0))
+    if cfg.moe_shared_experts:
+        y = y + jnp.einsum(
+            "tf,fd->td", _act(cfg, p, xt, "shared_", "td,df->tf"), p["shared_down"]
+        ).astype(x.dtype)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,275 @@
+"""Residual block assembly and the period-scanned decoder stack.
+
+A block is (pre-norm → mixer → residual, pre-norm → mlp → residual) with the
+mixer/mlp kinds taken from the config's repeating pattern (DESIGN.md §4).
+Heterogeneous stacks scan over *periods*: parameters for period position j are
+stacked along a leading ``n_periods`` axis, so HLO size is O(period) and
+compile time is depth-independent; ``scan_layers=False`` unrolls (smoke tests,
+roofline 1–2 period lowerings).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Block, ModelConfig
+from repro.distributed import ctx
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+Params = dict[str, Any]
+
+
+def init_block(cfg: ModelConfig, blk: Block, key: jax.Array, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": init_norm(cfg, dtype)}
+    if blk.mixer == "attn":
+        p["mixer"] = attn.init_attention(cfg, ks[0], dtype)
+    elif blk.mixer == "mamba":
+        p["mixer"] = mb.init_mamba(cfg, ks[0], dtype)
+    elif blk.mixer == "mlstm":
+        p["mixer"] = xl.init_mlstm(cfg, ks[0], dtype)
+    elif blk.mixer == "slstm":
+        p["mixer"] = xl.init_slstm(cfg, ks[0], dtype)
+    else:
+        raise ValueError(blk.mixer)
+    if blk.mlp != "none":
+        p["ln2"] = init_norm(cfg, dtype)
+        if blk.mlp == "dense":
+            p["mlp"] = init_mlp(cfg, ks[1], dtype)
+        elif blk.mlp == "moe":
+            p["mlp"] = moe_mod.init_moe(cfg, ks[1], dtype)
+        else:
+            raise ValueError(blk.mlp)
+    return p
+
+
+def apply_block(
+    cfg: ModelConfig,
+    blk: Block,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    unroll_time: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence (train/prefill) block. Returns (x, moe_aux)."""
+    # Megatron-style sequence parallelism on the residual stream: the saved
+    # per-layer residual is sharded (batch × seq) so scan-carried activations
+    # scale 1/(dp·tp); GSPMD inserts the all-gather before attention/mlp and
+    # the reduce-scatter after.
+    x = ctx.constrain(x, ctx.DP, ctx.TP, None)
+    h = apply_norm(cfg, p["ln1"], x)
+    if blk.mixer == "attn":
+        h = attn.attention_forward(cfg, p["mixer"], h, positions,
+                                   unroll_time=unroll_time)
+    elif blk.mixer == "mamba":
+        # chunk scans stay scanned even in roofline lowerings: their hidden
+        # body is <3% of mixer FLOPs and is added analytically
+        # (launch/dryrun.analytic_extra_flops); unrolling them explodes
+        # compile time with no accounting benefit
+        h = mb.mamba_forward(cfg, p["mixer"], h)
+    elif blk.mixer == "mlstm":
+        h = xl.mlstm_forward(cfg, p["mixer"], h)
+    else:
+        h = xl.slstm_forward(cfg, p["mixer"], h)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if blk.mlp != "none":
+        h = apply_norm(cfg, p["ln2"], x)
+        if blk.mlp == "dense":
+            h = apply_mlp(cfg, p["mlp"], h)
+        else:
+            h, aux = moe_mod.moe_forward(cfg, p["mlp"], h)
+        x = x + h
+    return x, aux
+
+
+# -- decode --------------------------------------------------------------------
+
+
+def init_block_cache(cfg: ModelConfig, blk: Block, batch: int, max_len: int,
+                     dtype) -> Params:
+    if blk.mixer == "attn":
+        return attn.init_kv_cache(cfg, batch, max_len, dtype)
+    if blk.mixer == "mamba":
+        return mb.init_mamba_cache(cfg, batch, dtype)
+    if blk.mixer == "mlstm":
+        return xl.init_mlstm_cache(cfg, batch)
+    return xl.init_slstm_cache(cfg, batch)
+
+
+def apply_block_decode(
+    cfg: ModelConfig,
+    blk: Block,
+    p: Params,
+    x: jax.Array,
+    cache: Params,
+    cache_len: jax.Array,
+    *,
+    unroll_time: bool = False,
+) -> tuple[jax.Array, Params]:
+    h = apply_norm(cfg, p["ln1"], x)
+    if blk.mixer == "attn":
+        h, cache = attn.attention_decode(cfg, p["mixer"], h, cache, cache_len,
+                                         unroll_time=unroll_time)
+    elif blk.mixer == "mamba":
+        h, cache = mb.mamba_decode(cfg, p["mixer"], h, cache)
+    elif blk.mixer == "mlstm":
+        h, cache = xl.mlstm_decode(cfg, p["mixer"], h, cache)
+    else:
+        h, cache = xl.slstm_decode(cfg, p["mixer"], h, cache)
+    x = x + h
+    if blk.mlp != "none":
+        h = apply_norm(cfg, p["ln2"], x)
+        if blk.mlp == "dense":
+            h = apply_mlp(cfg, p["mlp"], h)
+        else:
+            h, _ = moe_mod.moe_forward(cfg, p["mlp"], h)
+        x = x + h
+    return x, cache
+
+
+# -- the stack -----------------------------------------------------------------
+
+
+def init_stack(cfg: ModelConfig, key: jax.Array, dtype) -> list[Params]:
+    """Period-position-indexed params; stacked over n_periods when scanning."""
+    period = len(cfg.pattern)
+    keys = jax.random.split(key, cfg.num_layers).reshape(cfg.n_periods, period, 2)
+    if not cfg.scan_layers:
+        return [
+            [init_block(cfg, cfg.pattern[j], keys[i, j], dtype) for j in range(period)]
+            for i in range(cfg.n_periods)
+        ]
+    stacked = []
+    for j in range(period):
+        per = [init_block(cfg, cfg.pattern[j], keys[i, j], dtype)
+               for i in range(cfg.n_periods)]
+        stacked.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per))
+    return stacked
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def apply_stack(
+    cfg: ModelConfig,
+    stack: list[Params],
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    unroll_time: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Apply all layers. Returns (x, total_moe_aux)."""
+    period = len(cfg.pattern)
+
+    if not cfg.scan_layers:
+        # Same remat granularity as the scanned path (one period), so the
+        # roofline's unrolled 1–2 period lowerings see identical recompute.
+        def one_period(carry, per_params):
+            h, aux = carry
+            for j in range(period):
+                h, a = apply_block(cfg, cfg.pattern[j], per_params[j], h,
+                                   positions, unroll_time=unroll_time)
+                aux = aux + a
+            return (h, aux)
+
+        body = _remat(cfg, one_period)
+        carry = (x, jnp.zeros((), jnp.float32))
+        for per in stack:
+            carry = body(carry, per)
+        return carry
+
+    def period_body(carry, per_params):
+        h, aux = carry
+        for j in range(period):
+            h, a = apply_block(cfg, cfg.pattern[j], per_params[j], h, positions,
+                               unroll_time=unroll_time)
+            aux = aux + a
+        return (h, aux), None
+
+    body = _remat(cfg, period_body)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), tuple(stack)
+    )
+    return x, aux
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> list[Params]:
+    period = len(cfg.pattern)
+    if not cfg.scan_layers:
+        return [
+            [init_block_cache(cfg, cfg.pattern[j], batch, max_len, dtype)
+             for j in range(period)]
+            for _ in range(cfg.n_periods)
+        ]
+    out = []
+    for j in range(period):
+        one = init_block_cache(cfg, cfg.pattern[j], batch, max_len, dtype)
+        out.append(jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.n_periods, *t.shape)), one))
+    return out
+
+
+def apply_stack_decode(
+    cfg: ModelConfig,
+    stack: list[Params],
+    caches: list[Params],
+    x: jax.Array,
+    cache_len: jax.Array,
+    *,
+    unroll_time: bool = False,
+) -> tuple[jax.Array, list[Params]]:
+    period = len(cfg.pattern)
+
+    if not cfg.scan_layers:
+        new_caches = []
+        for per_p, per_c in zip(stack, caches):
+            row = []
+            for j in range(period):
+                x, c = apply_block_decode(cfg, cfg.pattern[j], per_p[j], x,
+                                          per_c[j], cache_len,
+                                          unroll_time=unroll_time)
+                row.append(c)
+            new_caches.append(row)
+        return x, new_caches
+
+    # Caches ride in the carry and are updated in place with
+    # dynamic_update_index — XLA aliases the buffer inside the while loop, so
+    # the (possibly huge) KV cache exists exactly once (donated at the jit
+    # boundary). Passing caches as scan xs/ys would double-buffer them.
+    def period_body(carry, per_params):
+        h, caches_c, i = carry
+        new_caches = []
+        for j in range(period):
+            cache_j = jax.tree_util.tree_map(
+                lambda t: jax.lax.dynamic_index_in_dim(t, i, keepdims=False),
+                caches_c[j])
+            h, c = apply_block_decode(cfg, cfg.pattern[j], per_params[j], h,
+                                      cache_j, cache_len,
+                                      unroll_time=unroll_time)
+            new_caches.append(jax.tree_util.tree_map(
+                lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                    full, upd.astype(full.dtype), i, 0),
+                caches_c[j], c))
+        return (h, tuple(new_caches), i + 1), None
+
+    (x, new_caches, _), _ = jax.lax.scan(
+        period_body, (x, tuple(caches), jnp.zeros((), jnp.int32)),
+        tuple(stack))
+    return x, list(new_caches)

@@ -1,0 +1,299 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory), arXiv:2405.04517.
+
+The mLSTM is a gated linear-attention with a per-head matrix memory C — in
+BSPS terms the (dh × dh) state is the resident local-memory token and the
+sequence streams past it in chunks, exactly like the mamba mixer. Implemented
+in a numerically-stabilised chunked form: the running log-gate maximum m is
+carried across chunks (the stabiliser state of the xLSTM paper, App. A), so
+the block is linear in sequence length → xlstm runs the ``long_500k`` cell.
+
+The sLSTM has per-unit scalar memories (c, n, m) and a block-diagonal
+(per-head) recurrence h_{t-1} → gates_t which is inherently sequential; the
+input projections for all timesteps are hoisted out of the ``lax.scan`` so the
+recurrent body is only the cheap (dh × 4dh) per-head matvec. The recurrent
+FLOPs inside the scan body are counted once by ``cost_analysis``; the roofline
+layer adds them analytically (EXPERIMENTS.md §Roofline, `analytic_extra`).
+
+Both blocks carry their own projections (the assigned xlstm-1.3b has d_ff = 0:
+no separate MLP).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    di = cfg.mlstm_expand * d
+    dh = di // h
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense_init(ks[0], (d, di), dtype),
+        "w_z": _dense_init(ks[1], (d, di), dtype),
+        # block-diagonal per-head q/k/v (xLSTM proj_blocksize)
+        "wq": _dense_init(ks[2], (h, dh, dh), dtype, scale_axis=1),
+        "wk": _dense_init(ks[3], (h, dh, dh), dtype, scale_axis=1),
+        "wv": _dense_init(ks[4], (h, dh, dh), dtype, scale_axis=1),
+        "w_if": _dense_init(ks[5], (di, 2 * h), dtype),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]).astype(dtype),
+        "w_down": _dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _mlstm_qkvgates(cfg: ModelConfig, p: Params, x: jax.Array):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    di = cfg.mlstm_expand * d
+    dh = di // h
+    # batch-parallel inside the mixer: gather the model-sharded features so
+    # the per-head block-diagonal einsums stay local (GSPMD otherwise falls
+    # back to involuntary full rematerialisation on the H×dh reshape)
+    xu = ctx.constrain(jnp.einsum("bsd,de->bse", x, p["w_up"]), ctx.DP, None, None)
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xh = xu.reshape(b, s, h, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]).astype(jnp.float32) * dh ** -0.5
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"]).astype(jnp.float32)
+    raw = jnp.einsum("bsi,ie->bse", xu, p["w_if"]).astype(jnp.float32) \
+        + p["if_bias"].astype(jnp.float32)
+    i_raw, f_raw = jnp.split(raw, 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid
+    return q, k, v, i_raw, log_f, z
+
+
+def _mlstm_chunk_step(carry, inp):
+    """One hyperstep: consume a chunk of the sequence stream.
+
+    carry: C̃ (B,H,dh,dh), ñ (B,H,dh), m (B,H) — exp(-m)-scaled state.
+    inp:   q,k,v (B,ck,H,dh); i_raw, log_f (B,ck,H).
+    """
+    C, n, m = carry
+    qb, kb, vb, ib, fb = inp
+    csum = jnp.cumsum(fb, axis=1)                       # (B, ck, H)
+    total = csum[:, -1]                                 # (B, H)
+
+    # intra-chunk log-weights D[t,s] = csum_t - csum_s + i_s (s ≤ t)
+    dmat = csum[:, :, None] - csum[:, None, :] + ib[:, None, :, :]  # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((csum.shape[1],) * 2, bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    # per-row stabiliser: previous running max decayed to t vs intra max
+    m_row = jnp.maximum(m[:, None] + csum, jnp.max(dmat, axis=2))   # (B,ck,H)
+
+    w = jnp.exp(dmat - m_row[:, :, None]).transpose(0, 3, 1, 2)     # (B,H,t,s)
+    scores = jnp.einsum("bthd,bshd->bhts", qb, kb)
+    pw = scores * w
+    y_intra = jnp.einsum("bhts,bshd->bthd", pw, vb)
+    n_intra = jnp.einsum("bhts->bth", pw)
+
+    decay_t = jnp.exp(m[:, None] + csum - m_row)                    # (B,ck,H)
+    y_state = jnp.einsum("bthd,bhde->bthe", qb, C) * decay_t[..., None]
+    n_state = jnp.einsum("bthd,bhd->bth", qb, n) * decay_t
+
+    n_tot = n_intra + n_state
+    denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_row))
+    out = (y_intra + y_state) / denom[..., None]                    # (B,ck,H,dh)
+
+    # advance state to chunk end
+    src = total[:, None] - csum + ib                                # (B,ck,H)
+    m_new = jnp.maximum(m + total, jnp.max(src, axis=1))
+    src_w = jnp.exp(src - m_new[:, None])
+    decay_s = jnp.exp(m + total - m_new)
+    C_new = decay_s[..., None, None] * C + jnp.einsum("bshd,bshe,bsh->bhde", kb, vb, src_w)
+    n_new = decay_s[..., None] * n + jnp.einsum("bshd,bsh->bhd", kb, src_w)
+    return (C_new, n_new, m_new), out
+
+
+def mlstm_forward(
+    cfg: ModelConfig, p: Params, x: jax.Array,
+    *,
+    chunk: int = 128,
+    unroll_time: bool = False,
+) -> jax.Array:
+    """Full-sequence mLSTM block. x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    di = cfg.mlstm_expand * d
+    dh = di // h
+    q, k, v, i_raw, log_f, z = _mlstm_qkvgates(cfg, p, x)
+
+    ck = min(chunk, s)
+    pad = (-s) % ck
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    sp = q.shape[1]
+    nc = sp // ck
+
+    def lead(t):  # (B, Sp, ...) -> (nc, B, ck, ...)
+        return t.reshape(b, nc, ck, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(lead(t) for t in (q, k, v, i_raw, log_f))
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+
+    if unroll_time:
+        carry, outs = (C0, n0, m0), []
+        for i in range(nc):
+            carry, o = _mlstm_chunk_step(carry, jax.tree_util.tree_map(lambda t: t[i], xs))
+            outs.append(o)
+        out = jnp.stack(outs, axis=0)
+    else:
+        _, out = jax.lax.scan(_mlstm_chunk_step, (C0, n0, m0), xs)
+
+    out = out.swapaxes(0, 1).reshape(b, sp, di)[:, :s]
+    out = out.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", out, p["w_down"])
+
+
+def mlstm_step_ref(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Per-timestep oracle (tests): the stabilised recurrent form."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    di = cfg.mlstm_expand * d
+    dh = di // h
+    q, k, v, i_raw, log_f, z = _mlstm_qkvgates(cfg, p, x)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp    # (B,H,dh) ×3, (B,H) ×2
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)
+        is_ = jnp.exp(it - m_new)
+        C = fs[..., None, None] * C + is_[..., None, None] * kt[..., :, None] * vt[..., None, :]
+        n = fs[..., None] * n + is_[..., None] * kt
+        y = jnp.einsum("bhd,bhde->bhe", qt, C)
+        nq = jnp.einsum("bhd,bhd->bh", qt, n)
+        denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_new))
+        return (C, n, m_new), y / denom[..., None]
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_raw.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    out = ys.swapaxes(0, 1).reshape(b, s, di)
+    out = out.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", out, p["w_down"])
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    h = cfg.num_heads
+    dh = cfg.mlstm_expand * cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params,
+) -> tuple[jax.Array, Params]:
+    """Single-token recurrent update. x: (B, 1, d)."""
+    q, k, v, i_raw, log_f, z = _mlstm_qkvgates(cfg, p, x)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    qt, kt, vt = q[:, 0], k[:, 0], v[:, 0]
+    it, ft = i_raw[:, 0], log_f[:, 0]
+    m_new = jnp.maximum(ft + m, it)
+    fs = jnp.exp(ft + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    C = fs[..., None, None] * C + is_[..., None, None] * kt[..., :, None] * vt[..., None, :]
+    n = fs[..., None] * n + is_[..., None] * kt
+    y = jnp.einsum("bhd,bhde->bhe", qt, C)
+    nq = jnp.einsum("bhd,bhd->bh", qt, n)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_new))
+    b = x.shape[0]
+    out = (y / denom[..., None]).reshape(b, 1, -1).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", out, p["w_down"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ModelConfig, key: jax.Array, dtype) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": _dense_init(ks[0], (d, 4 * d), dtype),
+        "r": _dense_init(ks[1], (h, dh, 4 * dh), dtype, scale_axis=1),
+        "bias": jnp.zeros((4 * d,), dtype),
+        "w_out": _dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_step(p_r, carry, g_t):
+    """carry: (c, n, h, m) each (B, H, dh); g_t: precomputed input gates (B,H,4dh)."""
+    c, n, h, m = carry
+    raw = g_t + jnp.einsum("bhd,hde->bhe", h, p_r)
+    z_r, i_r, f_r, o_r = jnp.split(raw, 4, axis=-1)       # (B,H,dh)
+    log_f = -jax.nn.softplus(-f_r)
+    m_new = jnp.maximum(log_f + m, i_r)
+    i_s = jnp.exp(i_r - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_r)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Full-sequence sLSTM block. x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    gates = (jnp.einsum("bsd,de->bse", x, p["w_in"]) + p["bias"]).astype(jnp.float32)
+    gates = ctx.constrain(gates, ctx.DP, None, None)
+    gates = gates.reshape(b, s, 4, h, dh).transpose(1, 0, 3, 2, 4).reshape(s, b, h, 4 * dh)
+    p_r = p["r"].astype(jnp.float32)
+    zeros = jnp.zeros((b, h, dh), jnp.float32)
+    carry = (zeros, zeros, zeros, jnp.full((b, h, dh), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(lambda cr, g: _slstm_step(p_r, cr, g), carry, gates)
+    out = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", out, p["w_out"])
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    # distinct arrays: donation must not see one buffer aliased three times
+    return {"c": jnp.zeros((batch, h, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "h": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def slstm_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Params,
+) -> tuple[jax.Array, Params]:
+    b, _, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    g = (jnp.einsum("bsd,de->bse", x, p["w_in"]) + p["bias"]).astype(jnp.float32)
+    g = g.reshape(b, 4, h, dh).transpose(0, 2, 1, 3).reshape(b, h, 4 * dh)
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hh, m), h_new = _slstm_step(p["r"].astype(jnp.float32), carry, g)
+    out = h_new.reshape(b, 1, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["w_out"])
+    return out, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,1 @@
+"""Optimizers: AdamW, LR schedules (WSD), gradient compression."""

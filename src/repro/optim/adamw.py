@@ -1,0 +1,73 @@
+"""AdamW in pure JAX, with fp32 moments over (possibly bf16) parameters.
+
+The update is elementwise, so every moment inherits its parameter's 2-D
+sharding (:func:`repro.distributed.sharding.opt_state_specs`) — the
+FSDP/ZeRO-style distribution of optimizer state falls out of GSPMD with no
+extra code. Optional gradient compression hooks live in
+:mod:`repro.optim.compress`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Params) -> dict[str, Any]:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(
+        self, grads: Params, state: dict[str, Any], params: Params,
+    ) -> tuple[Params, dict[str, Any], dict[str, jax.Array]]:
+        """Returns (new_params, new_state, metrics)."""
+        step = state["step"] + 1
+        lr = self.schedule(step)
+
+        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(gf)
+        if self.grad_clip > 0:
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                                   state["m"], gf)
+        v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                                   state["v"], gf)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, {
+            "grad_norm": gnorm, "lr": lr,
+        }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))

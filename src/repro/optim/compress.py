@@ -1,0 +1,75 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two composable distributed-optimization tricks (DESIGN.md §5):
+
+* ``bf16_allreduce`` — cast gradients to bf16 before the DP all-reduce and
+  back after (halves the dominant cross-pod collective volume; the fp32
+  master copy lives in the Adam moments). Implemented as a cast pair around
+  ``jax.lax.pmean``-equivalent GSPMD reductions: in a jit'd train step the
+  cast *before* grad-averaging is enough — XLA reduces in the narrow type.
+
+* ``TopKCompressor`` — magnitude top-k sparsification with error feedback
+  (memory): only the k largest-|g| entries are exchanged; the residual is
+  accumulated locally and added next step, preserving convergence
+  (Stich et al., 2018). Used for bandwidth-starved cross-pod links where the
+  BSPS collective term dominates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def bf16_grads(grads: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16) if g.dtype == jnp.float32 else g, grads
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Error-feedback top-k on flattened per-leaf gradients."""
+
+    ratio: float = 0.01  # fraction of entries kept
+
+    def init(self, params: Params) -> Params:
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+    def compress(
+        self, grads: Params, error: Params,
+    ) -> tuple[Params, Params]:
+        """Returns (sparse_grads_dense_layout, new_error).
+
+        The compressed gradient is returned dense (zeros off-support) so it
+        drops into the existing all-reduce; on real fabric the sparse indices
+        + values would be exchanged (volume accounted in the cost model as
+        2·k words vs n words).
+        """
+
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            flat = gf.reshape(-1)
+            k = max(1, int(flat.shape[0] * self.ratio))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            mask = jnp.abs(gf) >= thresh
+            kept = jnp.where(mask, gf, 0.0)
+            return kept.astype(g.dtype), gf - kept
+
+        out = jax.tree_util.tree_map(one, grads, error)
+        sparse = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return sparse, err
+
+    def words_exchanged(self, n_params: int) -> int:
+        """Cost-model hook: index+value words for the BSPS collective term."""
+        return 2 * max(1, int(n_params * self.ratio))

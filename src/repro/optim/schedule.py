@@ -1,0 +1,46 @@
+"""Learning-rate schedules: cosine and WSD (warmup-stable-decay, MiniCPM §4).
+
+WSD is the assigned minicpm-2b's distinctive recipe: linear warmup → long
+constant plateau → short (typically 10%) decay, enabling continuous
+pretraining from any plateau checkpoint — which composes well with this
+repo's checkpoint/restart story.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(peak_lr: float, warmup: int, total: int,
+                         floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        floor: float = 0.01):
+    """Warmup-Stable-Decay: MiniCPM's schedule."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        # exponential-style decay to floor (the paper uses ~exp decay)
+        dec = peak_lr * jnp.power(floor, t)
+        stable = jnp.full_like(step, peak_lr)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, stable, dec))
+        return out
+    return f
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.full_like(step.astype(jnp.float32), lr)
+    return f

@@ -1,0 +1,1 @@
+"""Training runtime: steps, loop, checkpoint/restart, stragglers."""

@@ -1,0 +1,143 @@
+"""The training loop: hypersteps + checkpoint/restart + straggler monitor.
+
+Structure per step (one pod-level hyperstep, DESIGN.md level 2):
+
+  [compute]   jitted train_step on batch t (donated params/opt state)
+  [overlap]   prefetcher stages batch t+1 (depth ≥ 2)
+  [overlap]   CheckpointManager writes snapshot asynchronously
+  [sync]      blocking on metrics = the bulk synchronisation
+
+Fault tolerance: auto-resume from the latest valid checkpoint (params, opt
+state, *and* the data-stream cursor — restart is a stream ``seek``); straggler
+monitor flags steps whose wall time is a >3σ outlier of the EWMA (on real
+fleets this feeds preemption/repair; here it logs and records).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.train import checkpoint as ckpt
+from repro.train.steps import make_train_step
+
+__all__ = ["TrainConfig", "StragglerMonitor", "train"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    aux_weight: float = 0.01
+
+
+class StragglerMonitor:
+    """EWMA + z-score outlier detector over hyperstep wall times."""
+
+    def __init__(self, alpha: float = 0.1, zmax: float = 3.0, warmup: int = 5):
+        self.alpha, self.zmax, self.warmup = alpha, zmax, warmup
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.events: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            self.mean = seconds if self.n == 1 else (
+                self.mean + (seconds - self.mean) / self.n)
+            self.var = max(self.var, (seconds - self.mean) ** 2)
+            return False
+        std = max(np.sqrt(self.var), 1e-6)
+        z = (seconds - self.mean) / std
+        is_straggler = z > self.zmax
+        if is_straggler:
+            self.events.append((step, seconds, z))
+        else:  # don't poison the EWMA with outliers
+            d = seconds - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    opt: AdamW,
+    *,
+    batch_putter: Callable[[dict], dict] | None = None,
+    data_cfg: DataConfig | None = None,
+    jit_kwargs: dict[str, Any] | None = None,
+    log: Callable[[str], None] = print,
+) -> dict[str, Any]:
+    """Run (or resume) a training job; returns final state + history."""
+    data_cfg = data_cfg or DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=512, global_batch=8, seed=tcfg.seed)
+    stream = TokenStream(data_cfg)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    opt_state = opt.init(params)
+    start_step = 0
+
+    if tcfg.ckpt_dir:
+        resumed = ckpt.restore_latest(
+            tcfg.ckpt_dir, {"params": params, "opt_state": opt_state})
+        if resumed is not None:
+            start_step, state, data_state = resumed
+            params, opt_state = state["params"], state["opt_state"]
+            stream.load_state_dict(data_state)        # seek — the BSPS restart
+            log(f"[resume] step {start_step}, stream cursor {stream.cursor}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt, aux_weight=tcfg.aux_weight),
+                      donate_argnums=(0, 1), **(jit_kwargs or {}))
+    manager = (ckpt.CheckpointManager(tcfg.ckpt_dir, every=tcfg.ckpt_every)
+               if tcfg.ckpt_dir else None)
+    prefetch = Prefetcher(stream, depth=2, put_fn=batch_putter)
+    monitor = StragglerMonitor()
+    history: list[dict[str, float]] = []
+
+    try:
+        for step in range(start_step, tcfg.steps):
+            t0 = time.perf_counter()
+            batch = prefetch.get()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            metrics = jax.tree_util.tree_map(float, jax.device_get(metrics))
+            dt = time.perf_counter() - t0
+            metrics["step_seconds"] = dt
+            if monitor.observe(step, dt):
+                log(f"[straggler] step {step}: {dt:.3f}s "
+                    f"(mean {monitor.mean:.3f}s)")
+            history.append(metrics)
+            if manager:
+                manager.maybe_save(
+                    step + 1,
+                    {"params": params, "opt_state": opt_state},
+                    data_state=stream.state_dict(),
+                )
+            if step % tcfg.log_every == 0:
+                log(f"[train] step {step} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} {dt * 1e3:.0f}ms")
+    finally:
+        prefetch.close()
+        if manager:
+            manager.wait()
+
+    if manager:
+        ckpt.save(tcfg.ckpt_dir, tcfg.steps,
+                  {"params": params, "opt_state": opt_state},
+                  data_state=stream.state_dict(), blocking=True)
+    return {
+        "params": params, "opt_state": opt_state,
+        "history": history, "stragglers": monitor.events,
+    }

