@@ -10,23 +10,17 @@ jitted matmul.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bsp import BSPAccelerator
+from repro.core.plan import median_seconds
 
 
 def _time(fn, repeats: int = 5) -> float:
-    fn()  # warmup / compile
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return median_seconds(fn, repeats)
 
 
 def measure_flops_rate(n: int = 768) -> float:

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.calibrate import calibrate, measure_fetch_model
-from repro.core import HyperstepRunner, StreamSet, inner_product_cost
+from repro.core import HyperstepRunner, StreamSet, host_plan
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -31,21 +31,29 @@ def run() -> list[tuple[str, float, str]]:
         c = 1 << log_c
         ss = StreamSet()
         sv, su = ss.create(v, c), ss.create(u, c)
+        # the same plan object that would drive the chip-level kernel: 2C-word
+        # fetch vs 2C FLOPs per hyperstep, priced by Eq. 1 on the calibrated acc
+        plan = host_plan([sv, su], flops_per_hyperstep=2.0 * c,
+                         name=f"inprod_C{c}")
         runner = HyperstepRunner(
             lambda a, t: dot(a, t[0], t[1]),
-            [sv, su], device=jax.devices()[0])
+            [sv, su], plan=plan, machine=acc, device=jax.devices()[0])
         out = runner.run(jnp.float32(0))
         assert abs(float(out) - float(np.dot(v, u))) < 1e2
         measured = runner.total_seconds
-        # Eq. 1 with the Fig.-4 link model: each hyperstep fetches 2 tokens of
-        # C words (t0 + C/BW each) overlapped-with/serialised-against 2C FLOPs
-        # of compute, plus the calibrated per-hyperstep barrier l.
-        n_h = n // c
+        table = runner.predicted_vs_measured()
+        # Eq. 1 with the Fig.-4 link model on top of the plan's raw prediction:
+        # each hyperstep fetches 2 tokens of C words (t0 + C/BW each)
+        # overlapped-with/serialised-against 2C FLOPs of compute, plus the
+        # calibrated per-hyperstep barrier l.
+        n_h = plan.num_hypersteps
         fetch_s = 2 * (t0 + c / bw_words)
         comp_s = 2 * c / acc.r
         predicted = n_h * (max(comp_s, fetch_s)
                            + acc.flops_to_seconds(acc.l)) + fetch_s
         rows.append((f"inprod_C{c}_us", measured * 1e6, "measured"))
+        rows.append((f"inprod_C{c}_plan_pred_over_meas",
+                     table["pred_over_meas"], "Eq.1 StreamPlan"))
         rows.append((f"inprod_C{c}_pred_over_meas", predicted / measured,
                      "Eq.1+Fig4 link model"))
 

@@ -1,0 +1,88 @@
+"""StreamPlan autotune: predicted (Eq. 1) vs measured time per block size.
+
+The paper's central claim is that T̃ = Σ_h max(T_h, e·ΣC_i) lets you *choose*
+token sizes before running anything. This module exercises exactly that:
+``repro.core.plan.autotune`` enumerates block-size candidates for the
+streamed matmul and the streamed dot, prices each with the calibrated
+accelerator pack, wall-clocks the predicted-best few (kernels run under
+interpret=True on CPU, compiled on TPU), and reports predicted next to
+measured for every candidate — the planner's Fig. 5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.calibrate import calibrate
+from repro.core import plan as planlib
+from repro.kernels.ops import interpret_mode
+from repro.kernels.streamed_dot import dot_plan, streamed_dot
+from repro.kernels.streamed_matmul import matmul_plan, streamed_matmul
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    acc = calibrate()
+    interp = interpret_mode()
+    rng = np.random.default_rng(0)
+
+    # -- matmul: autotune (block_m, block_n, block_k) on a 512³ problem ------
+    m = k = n = 512
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def build(block_m, block_n, block_k):
+        return matmul_plan(m, k, n, block_m=block_m, block_n=block_n,
+                           block_k=block_k, dtype=jnp.float32)
+
+    def measure(block_m, block_n, block_k):
+        out = streamed_matmul(a, b, block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interp)
+        jax.block_until_ready(out)
+
+    candidates = [
+        {"block_m": bm, "block_n": bn, "block_k": bk}
+        for bm in (128, 256) for bn in (128, 256) for bk in (128, 256, 512)
+    ]
+    best, choices = planlib.autotune(build, candidates, acc, measure=measure)
+    for c in choices:
+        tag = "x".join(str(c.params[f"block_{d}"]) for d in ("m", "n", "k"))
+        rows.append((f"matmul512_b{tag}_pred_us",
+                     c.predicted_seconds * 1e6, "Eq.1 StreamPlan"))
+        if c.measured_seconds is not None:
+            rows.append((f"matmul512_b{tag}_meas_us",
+                         c.measured_seconds * 1e6, "measured"))
+            rows.append((f"matmul512_b{tag}_pred_over_meas",
+                         c.row()["pred_over_meas"], "Eq.1 StreamPlan"))
+    rows.append(("matmul512_best_bm", best.params["block_m"], "autotune pick"))
+    rows.append(("matmul512_best_bn", best.params["block_n"], "autotune pick"))
+    rows.append(("matmul512_best_bk", best.params["block_k"], "autotune pick"))
+
+    # -- dot: autotune the token size C on a 1M-word inner product -----------
+    nvec = 1 << 20
+    v = jnp.asarray(rng.standard_normal(nvec), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(nvec), jnp.float32)
+
+    def build_dot(token_size):
+        return dot_plan(nvec // token_size, token_size, dtype=jnp.float32)
+
+    def measure_dot(token_size):
+        jax.block_until_ready(streamed_dot(v, u, token_size=token_size,
+                                           interpret=interp))
+
+    dot_cands = [{"token_size": 1 << s} for s in (12, 14, 16, 18)]
+    best_dot, dot_choices = planlib.autotune(
+        build_dot, dot_cands, acc, measure=measure_dot, measure_top=4)
+    for c in dot_choices:
+        cs = c.params["token_size"]
+        rows.append((f"dot1M_C{cs}_pred_us", c.predicted_seconds * 1e6,
+                     "Eq.1 StreamPlan"))
+        if c.measured_seconds is not None:
+            rows.append((f"dot1M_C{cs}_meas_us", c.measured_seconds * 1e6,
+                         "measured"))
+    rows.append(("dot1M_best_C", best_dot.params["token_size"], "autotune pick"))
+    rows.append(("dot1M_bandwidth_heavy",
+                 float(best_dot.plan.bandwidth_heavy(acc)), "Eq.1 e>1 criterion"))
+    return rows

@@ -5,6 +5,7 @@ Prints ``name,value,derived`` CSV per the repo convention. Modules:
   transfer_curve   — paper Figure 4 (speed vs message size)
   inner_product    — paper §3.1 (Eq. 1 prediction vs measurement)
   cannon_crossover — paper Figure 5 / Eq. 2 (runtime prediction + k_equal)
+  plan_table       — StreamPlan autotune: Eq. 1 prediction vs measured per block size
   roofline_table   — assignment §Roofline (from recorded dry-run artifacts)
 
 Select a subset: ``python -m benchmarks.run cannon_crossover``.
@@ -19,6 +20,7 @@ from benchmarks import (
     cannon_crossover,
     inner_product,
     mem_speeds,
+    plan_table,
     roofline_table,
     transfer_curve,
 )
@@ -28,6 +30,7 @@ MODULES = {
     "transfer_curve": transfer_curve,
     "inner_product": inner_product,
     "cannon_crossover": cannon_crossover,
+    "plan_table": plan_table,
     "roofline_table": roofline_table,
 }
 

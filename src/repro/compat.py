@@ -1,0 +1,52 @@
+"""Single import site for JAX APIs that churn across versions.
+
+Two shims, both one-line fixes when jax renames things again:
+
+* ``tpu_compiler_params(...)`` — ``pltpu.TPUCompilerParams`` (jax <= 0.4.x)
+  was renamed to ``pltpu.CompilerParams`` (jax >= 0.5). Every
+  ``pl.pallas_call`` in this repo goes through
+  :func:`repro.kernels.pipeline.lower`, which builds its compiler params
+  here, so no kernel ever touches the versioned name.
+* ``shard_map`` — lived at ``jax.experimental.shard_map.shard_map`` until it
+  was promoted to ``jax.shard_map``; the experimental path is slated for
+  removal. The distributed layer imports it from here.
+* ``pvary`` — newer shard_map's varying-manual-axes checker requires
+  ``jax.lax.pvary`` annotations; older jax has no such primitive (and no
+  check), so the fallback is identity.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pvary", "shard_map", "tpu_compiler_params"]
+
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+pvary = getattr(jax.lax, "pvary", None)
+if pvary is None:  # jax <= 0.4.x: no varying-axes check, annotation is a no-op
+
+    def pvary(x: Any, axis_names: tuple[str, ...]) -> Any:  # type: ignore[misc]
+        del axis_names
+        return x
+
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None
+) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(
+    *, dimension_semantics: tuple[str, ...] | None = None, **kwargs: Any
+):
+    """Mosaic compiler params under whichever name this jax version uses."""
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = dimension_semantics
+    return _COMPILER_PARAMS_CLS(**kwargs)

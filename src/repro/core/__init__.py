@@ -19,6 +19,15 @@ from repro.core.cost import (
     inner_product_cost,
 )
 from repro.core.hyperstep import HyperstepRecord, HyperstepRunner, run_bsps
+from repro.core.plan import (
+    PlanChoice,
+    ScratchSpec,
+    StreamPlan,
+    TokenSpec,
+    autotune,
+    enumerate_plans,
+    host_plan,
+)
 from repro.core.roofline import TPU_V5E, HardwareSpec, RooflineReport, analyze
 from repro.core.stream import Stream, StreamSet
 
@@ -27,6 +36,8 @@ __all__ = [
     "HyperstepCost", "SuperstepCost", "bsp_cost", "bsps_cost",
     "cannon_bsp_cost", "cannon_bsps_cost", "cannon_k_equal", "inner_product_cost",
     "HyperstepRecord", "HyperstepRunner", "run_bsps",
+    "PlanChoice", "ScratchSpec", "StreamPlan", "TokenSpec",
+    "autotune", "enumerate_plans", "host_plan",
     "TPU_V5E", "HardwareSpec", "RooflineReport", "analyze",
     "Stream", "StreamSet",
 ]

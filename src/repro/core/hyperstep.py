@@ -19,7 +19,12 @@ pipelining overlaps the HBM→VMEM copy of block i+1 with compute on block i.
 
 The executor records per-hyperstep wall times split into compute / fetch so the
 benchmarks can validate the BSPS cost model's ``max(T_h, e·ΣC_i)`` prediction
-(the paper's Fig. 5 methodology).
+(the paper's Fig. 5 methodology). Give the runner the run's
+:class:`~repro.core.plan.StreamPlan` (see :func:`repro.core.plan.host_plan`)
+and the machine's :class:`~repro.core.bsp.BSPAccelerator` and it prices the
+run with the same Eq. 1 used one level down for the Pallas kernels —
+:meth:`HyperstepRunner.predicted_vs_measured` is the predicted/measured table
+row.
 """
 
 from __future__ import annotations
@@ -31,6 +36,8 @@ from typing import Any, Callable, Sequence
 
 import jax
 
+from repro.core.bsp import BSPAccelerator
+from repro.core.plan import StreamPlan
 from repro.core.stream import Stream
 
 __all__ = ["HyperstepRecord", "HyperstepRunner", "run_bsps"]
@@ -83,6 +90,12 @@ class HyperstepRunner:
         If True (default) overlap next-token fetch with current compute — the
         defining feature of a hyperstep. If False, run serially (reference
         semantics; used by tests to check prefetching changes timing only).
+    plan / machine:
+        Optional :class:`StreamPlan` describing this run (see
+        :func:`repro.core.plan.host_plan`) and the
+        :class:`BSPAccelerator` to price it on. When both are given the
+        runner predicts its own wall time with Eq. 1 before running — the
+        plan also supplies the default hyperstep count.
     """
 
     def __init__(
@@ -94,6 +107,8 @@ class HyperstepRunner:
         prefetch: bool = True,
         device: Any | None = None,
         on_hyperstep_end: Callable[[int, Sequence[Stream]], None] | None = None,
+        plan: StreamPlan | None = None,
+        machine: BSPAccelerator | None = None,
     ) -> None:
         self._step = step
         self._streams = list(streams)
@@ -101,18 +116,41 @@ class HyperstepRunner:
         self._prefetch = prefetch
         self._device = device
         self._on_end = on_hyperstep_end
+        self.plan = plan
+        self.machine = machine
         self.records: list[HyperstepRecord] = []
-        # One background lane, like the single DMA engine per Epiphany core.
-        self._dma = ThreadPoolExecutor(max_workers=1, thread_name_prefix="bsps-dma")
 
     def run(self, state: Any, num_hypersteps: int | None = None) -> Any:
-        """Execute hypersteps until streams are exhausted (or a fixed count)."""
+        """Execute hypersteps until streams are exhausted (or a fixed count).
+
+        Callable repeatedly: closing the streams on exit rewinds their
+        cursors, so each call replays the program from the start (records
+        accumulate across calls).
+        """
+        # One background lane, like the single DMA engine per Epiphany core;
+        # per-run so the runner can be reused after the lane shuts down.
+        self._dma = ThreadPoolExecutor(max_workers=1, thread_name_prefix="bsps-dma")
         for s in self._streams:
             s.open(self._core)
         try:
             total = num_hypersteps
             if total is None:
-                total = min(s.num_tokens - s.cursor for s in self._streams)
+                remaining = min(
+                    (s.num_tokens - s.cursor for s in self._streams),
+                    default=None,
+                )
+                if self.plan is not None:
+                    # a plan sets the target count but can never outrun the
+                    # streams (cursors may have moved since it was built)
+                    total = self.plan.num_hypersteps
+                    if remaining is not None:
+                        total = min(total, remaining)
+                else:
+                    if remaining is None:
+                        raise ValueError(
+                            "need streams, a plan, or an explicit num_hypersteps"
+                        )
+                    total = remaining
             if total <= 0:
                 return state
 
@@ -163,13 +201,69 @@ class HyperstepRunner:
                     self._on_end(h + 1, self._streams)
             return state
         finally:
+            # join any in-flight fetch *before* closing: close() rewinds the
+            # cursors, and a background move_down landing afterwards would
+            # corrupt the replay state of the next run()
+            self._dma.shutdown(wait=True)
             for s in self._streams:
                 s.close(self._core)
-            self._dma.shutdown(wait=False)
 
     @property
     def total_seconds(self) -> float:
         return sum(r.step_seconds for r in self.records)
+
+    # -- cost-model hooks ----------------------------------------------------
+
+    def predicted_seconds(self) -> float | None:
+        """Eq. 1 prediction for this run, or None without a plan + machine.
+
+        After :meth:`run`, a ``num_hypersteps`` override shorter than the plan
+        is priced pro rata so prediction and measurement cover the same steps.
+        """
+        if self.plan is None or self.machine is None:
+            return None
+        pred = self.plan.predicted_seconds(self.machine)
+        if self.records and len(self.records) != self.plan.num_hypersteps:
+            pred *= len(self.records) / self.plan.num_hypersteps
+        return pred
+
+    def predicted_vs_measured(self) -> dict[str, float]:
+        """One predicted-vs-measured table row (run first, then call this)."""
+        if not self.records:
+            raise RuntimeError("run() the program before asking for the table row")
+        pred = self.predicted_seconds()
+        if pred is None:
+            raise RuntimeError("construct the runner with plan= and machine=")
+        meas = self.total_seconds
+        return {
+            "predicted_seconds": pred,
+            "measured_seconds": meas,
+            "pred_over_meas": pred / max(meas, 1e-12),
+            "bandwidth_heavy_predicted": float(self.plan.bandwidth_heavy(self.machine)),
+            "bandwidth_heavy_measured": float(self._measured_bandwidth_heavy()),
+        }
+
+    def _measured_bandwidth_heavy(self) -> bool:
+        """Majority vote over the hypersteps that actually fetched.
+
+        In prefetch mode ``fetch_seconds`` records ``max(compute, fetch)`` (the
+        lane is joined only after compute), so the raw ``r.bandwidth_heavy``
+        comparison is degenerate there; fetch dominated a step only if compute
+        finished and then *waited* on the lane for a non-trivial slice of the
+        step. Serial mode measures the two phases independently, where the
+        direct comparison is meaningful.
+        """
+        # vote only on hypersteps that fetched (each run's terminal record
+        # has fetch_words=0 — records accumulate across repeated run() calls)
+        recs = [r for r in self.records if r.fetch_words > 0] or self.records
+        if self._prefetch:
+            votes = [
+                r.fetch_seconds - r.compute_seconds > 0.05 * r.step_seconds
+                for r in recs
+            ]
+        else:
+            votes = [r.bandwidth_heavy for r in recs]
+        return sum(votes) > len(votes) / 2
 
 
 def run_bsps(

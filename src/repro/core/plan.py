@@ -1,0 +1,471 @@
+"""StreamPlan — declarative BSPS kernel plans scored by the paper's cost model.
+
+A :class:`StreamPlan` is the repo's single description of a bulk-synchronous
+pseudo-streaming computation (DESIGN.md §3): which token (block) of each
+stream is resident at every hyperstep, what persistent local state the core
+keeps between hypersteps, and how much work one hyperstep does. The same
+object serves three consumers:
+
+* :func:`repro.kernels.pipeline.lower` turns a chip-level plan into a
+  ``pl.pallas_call`` — grid, BlockSpecs, scratch, compiler params. No kernel
+  module constructs ``pallas_call`` itself.
+* :class:`repro.core.hyperstep.HyperstepRunner` accepts a pod/host-level plan
+  (built from :class:`~repro.core.stream.Stream` objects via
+  :func:`host_plan`) and reports its measured hyperstep timings next to the
+  plan's prediction.
+* The planner (:func:`autotune`) enumerates candidate token sizes under the
+  double-buffered local-memory budget (the paper's "prefetching halves the
+  effective local memory", :meth:`BSPAccelerator.max_token_words`), scores
+  each candidate with :func:`repro.core.cost.bsps_cost`
+  ``T̃ = Σ_h max(T_h, e·ΣC_i)`` and picks the predicted-fastest — the paper's
+  central claim that the cost function *selects* parameters, not merely
+  reports them.
+
+Token reuse (the paper's ``MOVE(Σ, -M)``) is expressed as a *non-injective*
+index map: the fetch schedule only charges ``e·C_i`` on hypersteps where the
+resident block index actually changes, so revisited tokens are free exactly
+like a cursor seek that stays put. Skipped work (the paper's "we are allowed
+to revisit or skip tokens") is expressed by a per-hyperstep ``flops`` callable
+that may return 0 for masked-out steps (causal attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsp import BSPAccelerator
+from repro.core.cost import HyperstepCost, bsps_cost
+
+__all__ = [
+    "TokenSpec",
+    "ScratchSpec",
+    "StreamPlan",
+    "PlanChoice",
+    "host_plan",
+    "enumerate_plans",
+    "autotune",
+    "median_seconds",
+]
+
+# Above this many hypersteps the exact per-step fetch schedule is not
+# enumerated; cost() falls back to the closed form H·max(mean_flops, e·ΣC_i).
+# Its fetch side charges every streamed token every hyperstep (exact for
+# dense matmul, an over-count for reuse patterns), but the compute side is a
+# per-step *average*, so for plans with skipped hypersteps on compute-bound
+# machines the closed form can sit slightly below the exact Eq. 1 sum — it is
+# an estimate, not a bound. Keeps planning O(1) for production-sized grids.
+ENUMERATION_LIMIT = 1 << 18
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenSpec:
+    """One stream's token as resident in local memory.
+
+    ``block_shape`` is the token shape C_i (in elements); ``index_map`` maps
+    grid coordinates -> block index, exactly the Pallas BlockSpec contract.
+    Non-injective maps encode token reuse (``MOVE``); a constant map encodes a
+    fully resident operand (fetched once, hyperstep 0).
+
+    ``full_shape`` is the backing array's shape in external memory — required
+    for output tokens (it becomes the ``out_shape`` of the lowered call),
+    optional for inputs.
+    """
+
+    name: str
+    block_shape: tuple[int, ...]
+    index_map: Callable[..., tuple[int, ...]]
+    dtype: Any = jnp.float32
+    full_shape: tuple[int, ...] | None = None
+
+    @property
+    def words(self) -> int:
+        """Token size C_i in words (elements)."""
+        return int(np.prod(self.block_shape, dtype=np.int64))
+
+    @property
+    def nbytes(self) -> int:
+        return self.words * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchSpec:
+    """Persistent local state (the paper's partial results, e.g. the C block
+    of Cannon or flash attention's (m, l, acc)). Lives in local memory for the
+    whole stream pass; never moves on the external link."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """A BSPS kernel as data: grid of hypersteps, token specs, scratch, work.
+
+    ``flops_per_hyperstep`` is either a number (uniform hypersteps) or a
+    callable over grid coordinates (pseudo-streaming skips — return ~0 for
+    steps whose token is skipped). ``mean_flops_per_hyperstep`` backs the
+    closed-form cost path for grids too large to enumerate.
+
+    ``dimension_semantics`` marks each grid axis "parallel" or "arbitrary"
+    for Mosaic; the innermost "arbitrary" axes are the sequential hyperstep
+    stream on a single chip.
+    """
+
+    name: str
+    grid: tuple[int, ...]
+    inputs: tuple[TokenSpec, ...]
+    outputs: tuple[TokenSpec, ...]
+    scratch: tuple[ScratchSpec, ...] = ()
+    dimension_semantics: tuple[str, ...] = ()
+    flops_per_hyperstep: float | Callable[..., float] = 0.0
+    mean_flops_per_hyperstep: float | None = None
+    # memoised fetch schedule — the plan is frozen, the walk is O(grid)
+    _fetch_cache: list | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+
+    def __post_init__(self) -> None:
+        if not self.grid or any(g <= 0 for g in self.grid):
+            raise ValueError(f"bad grid {self.grid}")
+        if self.dimension_semantics and len(self.dimension_semantics) != len(self.grid):
+            raise ValueError("dimension_semantics must match grid rank")
+        for t in self.outputs:
+            if t.full_shape is None:
+                raise ValueError(f"output token {t.name!r} needs full_shape")
+
+    # -- hyperstep accounting ------------------------------------------------
+
+    @property
+    def num_hypersteps(self) -> int:
+        return int(np.prod(self.grid, dtype=np.int64))
+
+    def _flops_at(self, coords: tuple[int, ...]) -> float:
+        f = self.flops_per_hyperstep
+        return float(f(*coords)) if callable(f) else float(f)
+
+    def fetch_schedule(self) -> list[int]:
+        """Words streamed down *at* each hyperstep (arrival order).
+
+        Walks the grid in Pallas execution order (last axis fastest) and
+        charges a token's C_i only on steps where its block index changes —
+        revisits (non-injective maps) and resident operands (constant maps)
+        are fetched once, exactly the pseudo-streaming cursor semantics.
+        Memoised (the plan is immutable); treat the result as read-only.
+        """
+        if self._fetch_cache is not None:
+            return self._fetch_cache
+        if self.num_hypersteps > ENUMERATION_LIMIT:
+            raise ValueError(
+                f"{self.name}: {self.num_hypersteps} hypersteps exceeds the "
+                f"enumeration limit {ENUMERATION_LIMIT}; use cost(exact=False)"
+            )
+        fetched: list[int] = []
+        prev: list[tuple[int, ...] | None] = [None] * len(self.inputs)
+        for coords in itertools.product(*(range(g) for g in self.grid)):
+            words = 0
+            for idx, tok in enumerate(self.inputs):
+                block = tuple(tok.index_map(*coords))
+                if block != prev[idx]:
+                    words += tok.words
+                    prev[idx] = block
+            fetched.append(words)
+        object.__setattr__(self, "_fetch_cache", fetched)
+        return fetched
+
+    def hyperstep_costs(self) -> list[HyperstepCost]:
+        """Exact per-hyperstep costs for :func:`repro.core.cost.bsps_cost`.
+
+        Eq. 1 charges hyperstep h with the fetch of hyperstep h+1's tokens
+        (hyperstep 0's tokens are resident at program start), so the arrival
+        schedule is shifted by one.
+        """
+        arrivals = self.fetch_schedule()
+        coords_iter = itertools.product(*(range(g) for g in self.grid))
+        costs = []
+        for h, coords in enumerate(coords_iter):
+            nxt = arrivals[h + 1] if h + 1 < len(arrivals) else 0
+            costs.append(
+                HyperstepCost(bsp_flops=self._flops_at(coords), fetch_words=[float(nxt)])
+            )
+        return costs
+
+    @property
+    def total_flops(self) -> float:
+        if callable(self.flops_per_hyperstep):
+            if self.num_hypersteps > ENUMERATION_LIMIT:
+                if self.mean_flops_per_hyperstep is None:
+                    raise ValueError(
+                        f"{self.name}: callable flops on a "
+                        f"{self.num_hypersteps}-step grid needs "
+                        "mean_flops_per_hyperstep"
+                    )
+                return self.mean_flops_per_hyperstep * self.num_hypersteps
+            return sum(
+                self._flops_at(c)
+                for c in itertools.product(*(range(g) for g in self.grid))
+            )
+        return float(self.flops_per_hyperstep) * self.num_hypersteps
+
+    @property
+    def mean_flops(self) -> float:
+        """Per-hyperstep flops for the closed-form cost path."""
+        if callable(self.flops_per_hyperstep):
+            if self.mean_flops_per_hyperstep is not None:
+                return self.mean_flops_per_hyperstep
+            return self.total_flops / self.num_hypersteps
+        return float(self.flops_per_hyperstep)
+
+    def cost(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
+        """Predicted T̃ in FLOP units (paper Eq. 1) on accelerator ``acc``.
+
+        ``exact=None`` enumerates the fetch schedule when the grid is small
+        enough, else uses the closed-form estimate ``H · max(mean_flops,
+        e·ΣC_i)`` — every streamed token charged every hyperstep, per-step
+        work averaged (see the ENUMERATION_LIMIT note on its bias).
+        """
+        if exact is None:
+            exact = self.num_hypersteps <= ENUMERATION_LIMIT
+        if exact:
+            return bsps_cost(self.hyperstep_costs(), acc)
+        words = float(sum(t.words for t in self.inputs))
+        return self.num_hypersteps * max(self.mean_flops, acc.e * words)
+
+    def predicted_seconds(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
+        return acc.flops_to_seconds(self.cost(acc, exact=exact))
+
+    def total_fetch_words(self, *, exact: bool | None = None) -> float:
+        if exact is None:
+            exact = self.num_hypersteps <= ENUMERATION_LIMIT
+        if not exact:
+            return float(sum(t.words for t in self.inputs)) * self.num_hypersteps
+        return float(sum(self.fetch_schedule()))
+
+    def bandwidth_heavy(self, acc: BSPAccelerator, *, exact: bool | None = None) -> bool:
+        """True if streaming the tokens costs more than computing on them
+        (paper §2 criterion, summed over the whole pass). ``exact=False``
+        stays O(1) on both sides of the comparison."""
+        flops = (
+            self.mean_flops * self.num_hypersteps
+            if exact is False else self.total_flops
+        )
+        return acc.e * self.total_fetch_words(exact=exact) > flops
+
+    # -- local-memory accounting --------------------------------------------
+
+    @property
+    def input_token_bytes(self) -> int:
+        """Streamed input tokens, double-buffered (paper: prefetch halves L)."""
+        return 2 * sum(t.nbytes for t in self.inputs)
+
+    @property
+    def output_token_bytes(self) -> int:
+        """Output tokens also ride the revolving pipeline buffers."""
+        return 2 * sum(t.nbytes for t in self.outputs)
+
+    @property
+    def scratch_bytes(self) -> int:
+        return sum(s.nbytes for s in self.scratch)
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Total resident local-memory footprint of one core/chip."""
+        return self.input_token_bytes + self.output_token_bytes + self.scratch_bytes
+
+    def fits(self, acc: BSPAccelerator) -> bool:
+        """Does the plan fit the accelerator's local memory L?
+
+        Double buffers are already counted in :attr:`vmem_bytes`, so this is
+        the same constraint as requiring each single-buffered token set to fit
+        in ``effective_local_words`` / ``max_token_words`` (paper §2).
+        """
+        return self.vmem_bytes <= acc.L * acc.word_bytes
+
+
+# ---------------------------------------------------------------------------
+# Pod/host-level plans from Stream objects
+# ---------------------------------------------------------------------------
+
+
+def host_plan(
+    streams: Sequence[Any],
+    *,
+    flops_per_hyperstep: float | Callable[..., float],
+    name: str = "host",
+    num_hypersteps: int | None = None,
+) -> StreamPlan:
+    """Build a pod/host-level StreamPlan from open-able ``Stream`` objects.
+
+    One grid axis — the hyperstep count (default: until the shortest stream is
+    exhausted, matching :class:`HyperstepRunner`); one TokenSpec per stream
+    with the stream's own token shape and the identity index map (tokens are
+    consumed in cursor order). The resulting plan prices a
+    ``HyperstepRunner`` run with the same Eq. 1 used one level down for the
+    Pallas kernels.
+    """
+    if not streams:
+        raise ValueError("need at least one stream")
+    h = num_hypersteps
+    if h is None:
+        h = min(s.num_tokens - s.cursor for s in streams)
+    if h <= 0:
+        raise ValueError(f"no hypersteps to plan (h={h})")
+    tokens = []
+    for s in streams:
+        trailing = tuple(s.data.shape[1:])
+        tokens.append(
+            TokenSpec(
+                name=s.name or f"stream{s.stream_id}",
+                block_shape=(s.token_size,) + trailing,
+                index_map=lambda t, nt=len(trailing): (t,) + (0,) * nt,
+                dtype=s.data.dtype,
+                full_shape=tuple(s.data.shape),
+            )
+        )
+    return StreamPlan(
+        name=name,
+        grid=(h,),
+        inputs=tuple(tokens),
+        outputs=(),
+        dimension_semantics=("arbitrary",),
+        flops_per_hyperstep=flops_per_hyperstep,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner: enumerate -> filter by budget -> score with Eq. 1 -> (measure)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """One scored candidate from :func:`autotune`."""
+
+    params: Mapping[str, Any]
+    plan: StreamPlan
+    feasible: bool
+    predicted_flops: float
+    predicted_seconds: float
+    measured_seconds: float | None = None
+
+    def row(self) -> dict[str, Any]:
+        """Flat record for the predicted-vs-measured tables."""
+        out = {
+            **{f"param_{k}": v for k, v in self.params.items()},
+            "feasible": self.feasible,
+            "vmem_bytes": self.plan.vmem_bytes,
+            "predicted_flops": self.predicted_flops,
+            "predicted_seconds": self.predicted_seconds,
+        }
+        if self.measured_seconds is not None:
+            out["measured_seconds"] = self.measured_seconds
+            if self.measured_seconds > 0:
+                out["pred_over_meas"] = self.predicted_seconds / self.measured_seconds
+        return out
+
+
+def enumerate_plans(
+    build: Callable[..., StreamPlan],
+    candidates: Iterable[Mapping[str, Any]],
+    acc: BSPAccelerator,
+    *,
+    exact: bool | None = None,
+) -> list[PlanChoice]:
+    """Score every candidate parameter set; feasible ones first, cheapest first.
+
+    ``exact`` is forwarded to :meth:`StreamPlan.cost` — pass False to score
+    with the O(1) closed form regardless of grid size (e.g. sweeps over many
+    production-shaped cells).
+    """
+    choices = []
+    for params in candidates:
+        plan = build(**params)
+        flops = plan.cost(acc, exact=exact)
+        choices.append(
+            PlanChoice(
+                params=dict(params),
+                plan=plan,
+                feasible=plan.fits(acc),
+                predicted_flops=flops,
+                predicted_seconds=acc.flops_to_seconds(flops),
+            )
+        )
+    # ties (common on the degenerate closed-form path) break toward fewer
+    # hypersteps: Eq. 1 omits the per-hyperstep barrier l, and the paper says
+    # to size tokens as large as local memory allows
+    choices.sort(
+        key=lambda c: (not c.feasible, c.predicted_seconds, c.plan.num_hypersteps)
+    )
+    return choices
+
+
+def median_seconds(fn: Callable[[], Any], repeats: int = 3) -> float:
+    """Warmup once (compile/trace), then median wall time of ``repeats`` runs.
+
+    The shared timing protocol: autotune's measurement pass and the host
+    calibration in ``benchmarks/calibrate.py`` both use it, so measured
+    numbers stay comparable.
+    """
+    fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def autotune(
+    build: Callable[..., StreamPlan],
+    candidates: Iterable[Mapping[str, Any]],
+    acc: BSPAccelerator,
+    *,
+    measure: Callable[..., Any] | None = None,
+    measure_top: int = 3,
+    repeats: int = 3,
+    exact: bool | None = None,
+) -> tuple[PlanChoice, list[PlanChoice]]:
+    """Pick the predicted-fastest feasible plan; optionally verify by running.
+
+    ``build(**params) -> StreamPlan`` constructs a candidate;  candidates that
+    blow the double-buffered local-memory budget (:meth:`StreamPlan.fits`,
+    i.e. ``BSPAccelerator.max_token_words``) are excluded from selection but
+    kept in the returned list for the tables. With ``measure(**params)`` given
+    (a thunk that runs the candidate end-to-end), the ``measure_top``
+    predicted-fastest feasible candidates are wall-clocked and the best
+    *measured* one wins — the predicted/measured ratio lands in each
+    :meth:`PlanChoice.row`, which is the paper's Fig. 5 validation inlined
+    into the planner.
+
+    Returns ``(best, all_choices)``.
+    """
+    choices = enumerate_plans(build, candidates, acc, exact=exact)
+    feasible = [c for c in choices if c.feasible]
+    if not feasible:
+        raise ValueError(
+            f"no candidate fits local memory "
+            f"(L = {acc.L} words on {acc.name}); smallest candidate needs "
+            f"{min((c.plan.vmem_bytes for c in choices), default=0)} bytes"
+        )
+    if measure is None:
+        return feasible[0], choices
+
+    timed: list[PlanChoice] = []
+    for c in feasible[:measure_top]:
+        seconds = median_seconds(lambda c=c: measure(**c.params), repeats)
+        timed.append(dataclasses.replace(c, measured_seconds=seconds))
+    timed.sort(key=lambda c: c.measured_seconds)
+    # splice the timed results back into the full table
+    by_key = {tuple(sorted(c.params.items())): c for c in timed}
+    choices = [by_key.get(tuple(sorted(c.params.items())), c) for c in choices]
+    return timed[0], choices

@@ -23,10 +23,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pvary, shard_map
 from repro.models.layers import ops_matmul
 
 __all__ = ["cannon_matmul"]
@@ -69,7 +69,7 @@ def cannon_matmul(
         b_blk = jax.lax.fori_loop(0, n - 1, shift_b, b_blk)
 
         acc = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
-        acc = jax.lax.pvary(acc, (axis_a, axis_b))  # mark device-varying for scan
+        acc = pvary(acc, (axis_a, axis_b))  # mark device-varying for scan
 
         def step(_, carry):
             acc, a_blk, b_blk = carry

@@ -18,9 +18,10 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import pvary, shard_map
 
 __all__ = ["pipeline_apply"]
 
@@ -43,8 +44,8 @@ def pipeline_apply(
         p_stage = jax.tree_util.tree_map(lambda t: t[0], params_local)
         buf = jnp.zeros_like(xs[0])
         outs = jnp.zeros_like(xs)
-        buf = jax.lax.pvary(buf, (axis,))
-        outs = jax.lax.pvary(outs, (axis,))
+        buf = pvary(buf, (axis,))
+        outs = pvary(outs, (axis,))
 
         def tick(t, carry):
             buf, outs = carry

@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the BSPS compute hot-spots (paper §3 algorithms).
 
-Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), a jit'd
-wrapper in ops.py, and a pure-jnp oracle in ref.py. Validated with
-interpret=True on CPU; compiled on TPU.
+Each kernel: <name>.py declares its streaming structure as a
+:class:`repro.core.plan.StreamPlan` (token shapes, index maps, scratch) plus
+the hyperstep body; :mod:`repro.kernels.pipeline` is the single point that
+lowers a plan to ``pl.pallas_call``. Public jit'd wrappers live in ops.py and
+pure-jnp oracles in ref.py. Validated with interpret=True on CPU; compiled on
+TPU. Block sizes can be chosen per accelerator with
+:func:`repro.core.plan.autotune` over each kernel's ``*_plan`` builder.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, pipeline, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "pipeline", "ref"]

@@ -11,9 +11,12 @@ exactly the hyperstep structure of Fig. 1.
 Causal masking additionally uses the *pseudo*-streaming property: KV tokens
 strictly above the diagonal are skipped (`pl.when` — the paper's "we are
 allowed to revisit or skip tokens at any given time"), so the stream is only
-read up to the diagonal. GQA is expressed through the K/V BlockSpec index maps
+read up to the diagonal. GQA is expressed through the K/V token index maps
 (q-head h reads kv-head h // group), a token-reuse pattern like Cannon's
-``MOVE(Σ, -M)``.
+``MOVE(Σ, -M)``. Both facts live in the plan (:func:`attention_plan`): the
+K/V maps are non-injective across q-heads, and ``flops_per_hyperstep`` is a
+callable that returns 0 for skipped blocks, so Eq. 1 prices the causal
+triangle correctly.
 
 Grid: (batch, q_heads, q_blocks, kv_blocks), kv innermost/sequential.
 """
@@ -25,9 +28,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_attention"]
+from repro.core.plan import ScratchSpec, StreamPlan, TokenSpec
+from repro.kernels import pipeline
+
+__all__ = ["flash_attention", "attention_plan"]
 
 _NEG_INF = -1e30
 
@@ -85,6 +90,75 @@ def _attn_kernel(
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def attention_plan(
+    b: int, hq: int, hkv: int, sq: int, skv: int, d: int,
+    *,
+    block_q: int, block_kv: int,
+    causal: bool = True, q_offset: int = 0, dtype=jnp.bfloat16,
+) -> StreamPlan:
+    """StreamPlan for GQA flash attention on padded (sq, skv).
+
+    Per hyperstep: one (block_q × block_kv) score tile — two MXU products
+    (QKᵀ and PV, 4·bq·bkv·d FLOPs) plus ~10·bq·bkv vector ops for the online
+    softmax. Causal hypersteps whose KV token lies strictly above the diagonal
+    cost 0 (the token is skipped, not computed on — its DMA still runs, which
+    is what the fetch side of Eq. 1 charges).
+    """
+    if sq % block_q or skv % block_kv:
+        raise ValueError(f"({sq},{skv}) must be padded to ({block_q},{block_kv})")
+    if hkv <= 0 or hq % hkv:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    group = hq // hkv
+    n_q, n_kv = sq // block_q, skv // block_kv
+    tile_flops = (4.0 * d + 10.0) * block_q * block_kv
+
+    def flops(b_, h, i, j):
+        if causal and j * block_kv > i * block_q + q_offset + block_q - 1:
+            return 0.0
+        return tile_flops
+
+    if causal:
+        # exact fraction of unskipped tiles (q_offset matters: decode's
+        # sq=1 rows sit at the end of the key sequence, skipping ~nothing;
+        # negative offsets can mask entire rows, hence the clamp at 0)
+        computed = sum(
+            max(0, min(n_kv, (i * block_q + q_offset + block_q - 1) // block_kv + 1))
+            for i in range(n_q)
+        )
+        mean_flops = tile_flops * computed / (n_q * n_kv)
+    else:
+        mean_flops = tile_flops
+
+    return StreamPlan(
+        name=f"attn_b{b}h{hq}.{hkv}_{sq}x{skv}x{d}_b{block_q}.{block_kv}",
+        grid=(b, hq, n_q, n_kv),
+        inputs=(
+            TokenSpec("Q", (1, 1, block_q, d),
+                      lambda b_, h, i, j: (b_, h, i, 0),
+                      dtype=dtype, full_shape=(b, hq, sq, d)),
+            TokenSpec("K", (1, 1, block_kv, d),
+                      lambda b_, h, i, j, g=group: (b_, h // g, j, 0),
+                      dtype=dtype, full_shape=(b, hkv, skv, d)),
+            TokenSpec("V", (1, 1, block_kv, d),
+                      lambda b_, h, i, j, g=group: (b_, h // g, j, 0),
+                      dtype=dtype, full_shape=(b, hkv, skv, d)),
+        ),
+        outputs=(
+            TokenSpec("O", (1, 1, block_q, d),
+                      lambda b_, h, i, j: (b_, h, i, 0),
+                      dtype=dtype, full_shape=(b, hq, sq, d)),
+        ),
+        scratch=(
+            ScratchSpec("m", (block_q, 1), jnp.float32),
+            ScratchSpec("l", (block_q, 1), jnp.float32),
+            ScratchSpec("acc", (block_q, d), jnp.float32),
+        ),
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        flops_per_hyperstep=flops,
+        mean_flops_per_hyperstep=mean_flops,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "block_q", "block_kv", "sm_scale", "interpret"),
@@ -109,7 +183,6 @@ def flash_attention(
     _, hkv, skv, _ = k.shape
     if hq % hkv:
         raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
-    group = hq // hkv
     sm_scale = sm_scale if sm_scale is not None else d ** -0.5
 
     bq = min(block_q, sq)
@@ -126,31 +199,19 @@ def flash_attention(
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     sq_p, skv_p = q.shape[2], k.shape[2]
-    n_q, n_kv = sq_p // bq, skv_p // bk
     q_offset = skv - sq  # decode: queries are the last sq positions
 
-    grid = (b, hq, n_q, n_kv)
-    out = pl.pallas_call(
+    plan = attention_plan(
+        b, hq, hkv, sq_p, skv_p, d,
+        block_q=bq, block_kv=bk, causal=causal, q_offset=q_offset,
+        dtype=q.dtype,
+    )
+    out = pipeline.lower(
+        plan,
         functools.partial(
             _attn_kernel,
-            n_kv=n_kv, block_q=bq, block_kv=bk,
+            n_kv=plan.grid[3], block_q=bq, block_kv=bk,
             causal=causal, sm_scale=sm_scale, q_offset=q_offset,
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),   # m
-            pltpu.VMEM((bq, 1), jnp.float32),   # l
-            pltpu.VMEM((bq, d), jnp.float32),   # acc
-        ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(q, k, v)

@@ -1,0 +1,72 @@
+"""Lower a chip-level StreamPlan to a Pallas TPU pipeline.
+
+This is the only module in the repo that calls ``pl.pallas_call``. Every
+kernel in ``kernels/`` declares its streaming structure as a
+:class:`repro.core.plan.StreamPlan` (token shapes, index maps, scratch,
+dimension semantics) and hands it here together with the hyperstep body; the
+mapping is mechanical (DESIGN.md §3):
+
+  ============================  ==========================================
+  StreamPlan                    pl.pallas_call
+  ============================  ==========================================
+  grid (hypersteps)             grid
+  TokenSpec(block, index_map)   pl.BlockSpec(block, index_map)
+  output TokenSpec.full_shape   out_shape=jax.ShapeDtypeStruct(...)
+  ScratchSpec                   pltpu.VMEM scratch ref
+  dimension_semantics           compiler params (via the compat shim)
+  ============================  ==========================================
+
+Mosaic's automatic grid pipelining then implements the hyperstep schedule:
+the next grid step's HBM→VMEM DMA is issued while the current step computes,
+which is the paper's prefetch-overlapped hyperstep (Fig. 1), and the double
+pipeline buffers it allocates are exactly the paper's "prefetching halves the
+effective local memory" — which is why :meth:`StreamPlan.vmem_bytes` charges
+streamed tokens twice and the planner budgets against it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.core.plan import StreamPlan
+
+__all__ = ["lower"]
+
+
+def lower(
+    plan: StreamPlan,
+    body: Callable[..., None],
+    *,
+    interpret: bool = False,
+    **compiler_kwargs: Any,
+) -> Callable[..., Any]:
+    """Emit the ``pl.pallas_call`` for ``plan`` with hyperstep body ``body``.
+
+    ``body`` receives one ref per plan input (in order), one per output, then
+    one per scratch spec — the standard Pallas kernel signature. Returns the
+    callable to apply to the full (external-memory) operands. Plans with a
+    single output return a bare array, matching ``pallas_call``.
+    """
+    in_specs = [pl.BlockSpec(t.block_shape, t.index_map) for t in plan.inputs]
+    out_specs = [pl.BlockSpec(t.block_shape, t.index_map) for t in plan.outputs]
+    out_shapes = [jax.ShapeDtypeStruct(t.full_shape, t.dtype) for t in plan.outputs]
+    if len(plan.outputs) == 1:
+        out_specs, out_shapes = out_specs[0], out_shapes[0]
+    return pl.pallas_call(
+        body,
+        grid=plan.grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM(s.shape, s.dtype) for s in plan.scratch],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=plan.dimension_semantics or None,
+            **compiler_kwargs,
+        ),
+        interpret=interpret,
+    )

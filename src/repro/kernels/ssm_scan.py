@@ -10,6 +10,10 @@ h (d_inner × d_state) never leaves VMEM between hypersteps, which is the
 whole point of the BSPS formulation: only the O(L·d) stream moves on the
 HBM link, not the O(L·d·n) expanded state.
 
+In the plan (:func:`ssm_plan`) A and D have *constant* index maps: they are
+resident operands, fetched once at hyperstep 0 — the fetch schedule charges
+them nothing afterwards, unlike the four per-chunk streams.
+
 Grid: (batch, n_chunks), chunks sequential (state carries across grid steps,
 reset at chunk 0 of each batch element).
 """
@@ -21,9 +25,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ssm_scan"]
+from repro.core.plan import ScratchSpec, StreamPlan, TokenSpec
+from repro.kernels import pipeline
+
+__all__ = ["ssm_scan", "ssm_plan"]
 
 
 def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref,
@@ -52,6 +58,48 @@ def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref,
     h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
 
 
+def ssm_plan(
+    bsz: int, seq: int, d_inner: int, d_state: int,
+    *,
+    chunk: int, dtype=jnp.float32, param_dtype=jnp.float32,
+) -> StreamPlan:
+    """StreamPlan for the chunked selective scan on a padded sequence.
+
+    ~10·d_inner·d_state FLOPs per scanned position (exp/decay, state update,
+    output contraction — same accounting as ``launch.dryrun``'s analytic scan
+    correction), times ``chunk`` positions per hyperstep. ``param_dtype``
+    prices the resident A/D operands, which the model keeps in fp32 even for
+    bf16 activation streams.
+    """
+    if seq % chunk:
+        raise ValueError(f"seq {seq} must be padded to chunk {chunk}")
+    return StreamPlan(
+        name=f"ssm_b{bsz}_{seq}x{d_inner}x{d_state}_c{chunk}",
+        grid=(bsz, seq // chunk),
+        inputs=(
+            TokenSpec("x", (1, chunk, d_inner), lambda i, j: (i, j, 0),
+                      dtype=dtype, full_shape=(bsz, seq, d_inner)),
+            TokenSpec("dt", (1, chunk, d_inner), lambda i, j: (i, j, 0),
+                      dtype=dtype, full_shape=(bsz, seq, d_inner)),
+            TokenSpec("B", (1, chunk, d_state), lambda i, j: (i, j, 0),
+                      dtype=dtype, full_shape=(bsz, seq, d_state)),
+            TokenSpec("C", (1, chunk, d_state), lambda i, j: (i, j, 0),
+                      dtype=dtype, full_shape=(bsz, seq, d_state)),
+            TokenSpec("A", (d_inner, d_state), lambda i, j: (0, 0),
+                      dtype=param_dtype, full_shape=(d_inner, d_state)),
+            TokenSpec("D", (1, d_inner), lambda i, j: (0, 0),
+                      dtype=param_dtype, full_shape=(1, d_inner)),
+        ),
+        outputs=(
+            TokenSpec("y", (1, chunk, d_inner), lambda i, j: (i, j, 0),
+                      dtype=dtype, full_shape=(bsz, seq, d_inner)),
+        ),
+        scratch=(ScratchSpec("h", (d_inner, d_state), jnp.float32),),
+        dimension_semantics=("arbitrary", "arbitrary"),
+        flops_per_hyperstep=10.0 * chunk * d_inner * d_state,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssm_scan(
     x: jax.Array,      # (B, L, d_inner)
@@ -73,28 +121,14 @@ def ssm_scan(
         x, dt = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (x, dt))
         b, c = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (b, c))
     seq_p = x.shape[1]
-    n_chunks = seq_p // ck
-    d2 = d.reshape(1, d_inner)
 
-    out = pl.pallas_call(
+    plan = ssm_plan(bsz, seq_p, d_inner, d_state, chunk=ck, dtype=x.dtype,
+                    param_dtype=a.dtype)
+    out = pipeline.lower(
+        plan,
         functools.partial(_scan_kernel, chunk=ck),
-        grid=(bsz, n_chunks),
-        in_specs=[
-            pl.BlockSpec((1, ck, d_inner), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, ck, d_inner), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, ck, d_state), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, ck, d_state), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((d_inner, d_state), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, d_inner), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, ck, d_inner), lambda i, j: (i, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, seq_p, d_inner), x.dtype),
-        scratch_shapes=[pltpu.VMEM((d_inner, d_state), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
         interpret=interpret,
-    )(x, dt, b, c, a, d2)
+    )(x, dt, b, c, a, d.reshape(1, d_inner))
     if pad:
         out = out[:, :seq, :]
     return out

@@ -10,7 +10,9 @@ reduction is a ``psum`` in the distributed layer.
 Cost (paper): T = n·max(2C, 2Ce) + p + (p-1)g + l — bandwidth-heavy iff e > 1.
 On v5e, e ≈ 481 FLOP/word (bf16), so this kernel is *always* bandwidth heavy:
 its roofline is HBM, and block size only needs to be large enough to saturate
-DMA (≥ ~512 lanes), which ``token_size``'s default respects.
+DMA (≥ ~512 lanes), which ``token_size``'s default respects. The plan
+(:func:`dot_plan`) prices exactly the paper's closed form: 2C FLOPs per
+hyperstep vs 2C streamed words.
 """
 
 from __future__ import annotations
@@ -20,9 +22,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["streamed_dot"]
+from repro.core.plan import ScratchSpec, StreamPlan, TokenSpec
+from repro.kernels import pipeline
+
+__all__ = ["streamed_dot", "dot_plan"]
 
 
 def _dot_kernel(v_ref, u_ref, out_ref, acc_ref, *, n_tok: int):
@@ -39,6 +43,31 @@ def _dot_kernel(v_ref, u_ref, out_ref, acc_ref, *, n_tok: int):
     @pl.when(t == n_tok - 1)
     def _store():
         out_ref[0, 0] = acc_ref[0, 0]
+
+
+def dot_plan(n_tok: int, c: int, *, dtype=jnp.float32) -> StreamPlan:
+    """StreamPlan for α = v·u over ``n_tok`` hypersteps of C-word tokens.
+
+    The backing arrays are viewed as (n_tok, C) token matrices (TPU wants
+    >= 2-D blocks); the (1, 1) output is written once on the final hyperstep.
+    """
+    return StreamPlan(
+        name=f"dot_{n_tok}x{c}",
+        grid=(n_tok,),
+        inputs=(
+            TokenSpec("v", (1, c), lambda t: (t, 0), dtype=dtype,
+                      full_shape=(n_tok, c)),
+            TokenSpec("u", (1, c), lambda t: (t, 0), dtype=dtype,
+                      full_shape=(n_tok, c)),
+        ),
+        outputs=(
+            TokenSpec("alpha", (1, 1), lambda t: (0, 0), dtype=jnp.float32,
+                      full_shape=(1, 1)),
+        ),
+        scratch=(ScratchSpec("acc", (1, 1), jnp.float32),),
+        dimension_semantics=("arbitrary",),
+        flops_per_hyperstep=2.0 * c,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("token_size", "interpret"))
@@ -59,22 +88,10 @@ def streamed_dot(
         v = jnp.pad(v, (0, pad))
         u = jnp.pad(u, (0, pad))
     n_tok = v.shape[0] // c
-    # TPU wants >= 2-D blocks: view the stream as (n_tok, C) token matrix.
-    v2 = v.reshape(n_tok, c)
-    u2 = u.reshape(n_tok, c)
-    out = pl.pallas_call(
+    plan = dot_plan(n_tok, c, dtype=v.dtype)
+    out = pipeline.lower(
+        plan,
         functools.partial(_dot_kernel, n_tok=n_tok),
-        grid=(n_tok,),
-        in_specs=[
-            pl.BlockSpec((1, c), lambda t: (t, 0)),
-            pl.BlockSpec((1, c), lambda t: (t, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda t: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
         interpret=interpret,
-    )(v2, u2)
+    )(v.reshape(n_tok, c), u.reshape(n_tok, c))
     return out[0, 0]

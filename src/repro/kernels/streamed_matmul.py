@@ -20,8 +20,11 @@ reuse via the stream cursor (`MOVE(Σ, -M)`) corresponds to the non-injective
 BlockSpec index maps: A's tile (i, s) is re-fetched for every j — the paper's
 "loop over groups of M blocks of A a number of M times".
 
-Block sizes default to 128/256 multiples so the MXU (128×128) stays aligned and
-three tiles (+ double buffers) fit in VMEM; see ``vmem_bytes``.
+The streaming structure lives in :func:`matmul_plan` (a
+:class:`~repro.core.plan.StreamPlan`) and is lowered by
+:func:`repro.kernels.pipeline.lower`; the planner scores the same plan with
+Eq. 1 to pick block sizes (``plan_candidates`` + ``repro.core.plan.autotune``).
+Defaults are 128/256 multiples so the MXU (128×128) stays aligned.
 """
 
 from __future__ import annotations
@@ -31,9 +34,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["streamed_matmul", "vmem_bytes"]
+from repro.core.plan import ScratchSpec, StreamPlan, TokenSpec
+from repro.kernels import pipeline
+
+__all__ = ["streamed_matmul", "matmul_plan", "plan_candidates", "vmem_bytes"]
 
 
 def _matmul_kernel(a_ref, b_ref, c_ref, acc_ref, *, n_k: int):
@@ -54,11 +59,65 @@ def _matmul_kernel(a_ref, b_ref, c_ref, acc_ref, *, n_k: int):
         c_ref[...] = acc_ref[...].astype(c_ref.dtype)
 
 
+def matmul_plan(
+    m: int, k: int, n: int,
+    *,
+    block_m: int, block_n: int, block_k: int,
+    dtype=jnp.bfloat16, out_dtype=None,
+) -> StreamPlan:
+    """StreamPlan for C = A·B, shapes (m, k) × (k, n).
+
+    Ragged shapes are rounded up to block multiples (the paper: "padding with
+    zeros if necessary") — the plan describes the padded problem, matching
+    what :func:`streamed_matmul` lowers. Grid (i, j, s): s is the hyperstep
+    stream over K; A's map (i, s) ignores j (token reuse — each A tile is
+    revisited for every j), B's map (s, j) ignores i.
+    """
+    m = -(-m // block_m) * block_m
+    n = -(-n // block_n) * block_n
+    k = -(-k // block_k) * block_k
+    out_dtype = out_dtype or dtype
+    return StreamPlan(
+        name=f"matmul_{m}x{k}x{n}_b{block_m}.{block_n}.{block_k}",
+        grid=(m // block_m, n // block_n, k // block_k),
+        inputs=(
+            TokenSpec("A", (block_m, block_k), lambda i, j, s: (i, s),
+                      dtype=dtype, full_shape=(m, k)),
+            TokenSpec("B", (block_k, block_n), lambda i, j, s: (s, j),
+                      dtype=dtype, full_shape=(k, n)),
+        ),
+        outputs=(
+            TokenSpec("C", (block_m, block_n), lambda i, j, s: (i, j),
+                      dtype=out_dtype, full_shape=(m, n)),
+        ),
+        scratch=(ScratchSpec("acc", (block_m, block_n), jnp.float32),),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        flops_per_hyperstep=2.0 * block_m * block_n * block_k,
+    )
+
+
+def plan_candidates(m: int, k: int, n: int) -> list[dict[str, int]]:
+    """MXU-aligned block-size grid for the planner, clipped to the problem."""
+    sizes = (128, 256, 512)
+    cands = []
+    for bm in sizes:
+        for bn in sizes:
+            for bk in sizes:
+                cands.append({
+                    "block_m": min(bm, m), "block_n": min(bn, n),
+                    "block_k": min(bk, k),
+                })
+    # dedupe after clipping
+    return [dict(t) for t in sorted({tuple(sorted(c.items())) for c in cands})]
+
+
 def vmem_bytes(block_m: int, block_n: int, block_k: int, itemsize: int = 2) -> int:
     """Resident VMEM footprint: A,B tokens double-buffered + fp32 accumulator.
 
-    The ×2 on the streamed tokens is the paper's "prefetching halves effective
-    local memory" — Mosaic allocates both pipeline buffers in VMEM.
+    Legacy accessor kept for callers/tests (= ``plan.input_token_bytes +
+    plan.scratch_bytes``); the general accounting is
+    :attr:`StreamPlan.vmem_bytes`, which additionally counts the streamed
+    output block.
     """
     tokens = (block_m * block_k + block_k * block_n) * itemsize * 2
     acc = block_m * block_n * 4
@@ -97,21 +156,12 @@ def streamed_matmul(
         b = jnp.pad(b, ((0, pad_k), (0, pad_n)))
     mp, kp = a.shape
     np_ = b.shape[1]
-    grid = (mp // bm, np_ // bn, kp // bk)
 
-    out = pl.pallas_call(
-        functools.partial(_matmul_kernel, n_k=grid[2]),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),  # Σ^A token (i, s)
-            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),  # Σ^B token (s, j)
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+    plan = matmul_plan(mp, kp, np_, block_m=bm, block_n=bn, block_k=bk,
+                       dtype=a.dtype, out_dtype=out_dtype)
+    out = pipeline.lower(
+        plan,
+        functools.partial(_matmul_kernel, n_k=plan.grid[2]),
         interpret=interpret,
     )(a, b)
     if pad_m or pad_n:

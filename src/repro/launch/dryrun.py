@@ -41,7 +41,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, applicable_shapes, get_config
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import plan as planlib
 from repro.core import roofline as rf
+from repro.core.bsp import TPU_V5E_CHIP, BSPAccelerator
 from repro.core.hlo import collective_bytes, fused_bytes
 from repro.distributed import ctx
 from repro.distributed import sharding as sh
@@ -204,6 +206,78 @@ def analytic_extra_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
     return extra * tokens * mult
 
 
+def _round_up(x: int, to: int) -> int:
+    return -(-x // to) * to
+
+
+def stream_plan_report(
+    cfg: ModelConfig, shape: ShapeSpec, acc: BSPAccelerator = TPU_V5E_CHIP,
+    *, chips: int = 1,
+) -> dict[str, Any]:
+    """Chip-level StreamPlans for the cell's kernel hot-spots.
+
+    For each hot-spot the planner (:func:`repro.core.plan.autotune`)
+    enumerates MXU-aligned block sizes under the double-buffered VMEM budget,
+    scores them with Eq. 1 on the v5e chip pack, and the chosen blocks +
+    predicted seconds are recorded next to the cell's measured roofline
+    terms — the cost-model side of the predicted-vs-measured table.
+
+    ``chips`` divides the batch/token dimensions so the plan prices one
+    chip's slice of the cell, in the same per-device units as the roofline
+    terms it sits next to.
+    """
+    from repro.kernels.flash_attention import attention_plan
+    from repro.kernels.streamed_matmul import matmul_plan, plan_candidates
+
+    def pick(build, candidates):
+        # closed-form scoring: production-shaped grids make the exact fetch
+        # enumeration cost seconds per candidate for no ranking benefit
+        best, _ = planlib.autotune(build, candidates, acc, exact=False)
+        return {
+            **best.params,
+            "predicted_seconds": best.predicted_seconds,
+            "vmem_bytes": best.plan.vmem_bytes,
+            "bandwidth_heavy": best.plan.bandwidth_heavy(acc, exact=False),
+        }
+
+    report: dict[str, Any] = {}
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    tokens = max(1, -(-tokens // chips))           # per-chip slice (batch DP)
+    batch = max(1, -(-shape.global_batch // chips))
+    d_ff = cfg.d_ff or cfg.moe_d_ff or 4 * cfg.d_model
+
+    def build_mm(block_m, block_n, block_k):
+        # matmul_plan rounds ragged dims up to block multiples itself
+        return matmul_plan(
+            tokens, cfg.d_model, d_ff,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            dtype=jnp.bfloat16,
+        )
+
+    report["ffn_matmul"] = pick(build_mm, plan_candidates(tokens, cfg.d_model, d_ff))
+
+    sq = 1 if shape.kind == "decode" else shape.seq_len
+    skv = shape.seq_len
+    d_head = cfg.head_dim_
+
+    def build_attn(block_q, block_kv):
+        return attention_plan(
+            batch, cfg.num_heads, max(cfg.num_kv_heads, 1),
+            _round_up(sq, block_q), _round_up(skv, block_kv), d_head,
+            block_q=block_q, block_kv=block_kv,
+            causal=True, q_offset=skv - sq, dtype=jnp.bfloat16,
+        )
+
+    # mirror the kernel's bq = min(block_q, sq) clamp so the recorded block
+    # sizes are ones flash_attention actually runs (decode: block_q = 1)
+    q_cands = sorted({min(b, sq) for b in (128, 256, 512)})
+    kv_cands = sorted({min(b, skv) for b in (128, 256, 512)})
+    report["attention"] = pick(build_attn, [
+        {"block_q": bq, "block_kv": bkv} for bq in q_cands for bkv in kv_cands
+    ])
+    return report
+
+
 def _coerce(v: str):
     for t in (int, float):
         try:
@@ -231,6 +305,9 @@ def run_cell(
         "chips": chips, "kind": shape.kind, "tag": tag,
         "attn_impl": os.environ.get("REPRO_ATTN_IMPL", "blockwise"),
         "overrides": overrides or {},
+        # cost-model side of the predicted-vs-measured table: planner-chosen
+        # block sizes + Eq. 1 predictions for one chip's slice of the cell
+        "stream_plans": stream_plan_report(cfg, shape, chips=chips),
     }
 
     t0 = time.time()

@@ -187,10 +187,12 @@ def test_collective_bytes_on_real_hlo():
     mesh = jax.make_mesh((1,), ("x",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import shard_map
+
     def f(a):
         return jax.lax.psum(a, "x")
 
-    g = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())
+    g = shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P())
     txt = jax.jit(g).lower(jnp.ones((8, 8))).compile().as_text()
     stats = collective_bytes(txt)
     # single-device: collective may be elided; parser must not crash and

@@ -10,6 +10,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bsp import BSPAccelerator
