@@ -1,90 +1,25 @@
-"""Calibrate a BSPAccelerator parameter pack for *this* host.
+"""Calibration shim — the implementation moved to :mod:`repro.core.calibrate`.
 
-The paper (§5) measures (r, g, l, e) for the Epiphany-III; we do the same for
-the container so the cost model's predictions can be validated against
-measured hyperstep timings (§6 methodology). The "external memory" link of
-this host is main RAM → jax device buffer (a memcpy), the compute rate r is a
-jitted matmul.
+The launchers (``repro.launch.train`` / ``repro.launch.serve``) need a
+measured machine pack to print their predicted-vs-measured rows, so the
+measurement code lives inside the package; this module keeps the historical
+``benchmarks.calibrate`` import path working for the benchmark harness.
 """
 
 from __future__ import annotations
 
-import dataclasses
+from repro.core.calibrate import (  # noqa: F401
+    calibrate,
+    measure_external_bandwidth,
+    measure_fetch_model,
+    measure_flops_rate,
+    measure_hyperstep_latency,
+)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.bsp import BSPAccelerator
-from repro.core.plan import median_seconds
-
-
-def _time(fn, repeats: int = 5) -> float:
-    return median_seconds(fn, repeats)
-
-
-def measure_flops_rate(n: int = 768) -> float:
-    a = jnp.asarray(np.random.default_rng(0).standard_normal((n, n)), jnp.float32)
-    f = jax.jit(lambda a: a @ a)
-    dt = _time(lambda: jax.block_until_ready(f(a)))
-    return 2 * n**3 / dt
-
-
-def measure_external_bandwidth(nbytes: int = 1 << 26) -> float:
-    """Host RAM -> device buffer words/s (the e-link of this machine)."""
-    src = np.random.default_rng(0).standard_normal(nbytes // 4).astype(np.float32)
-    dt = _time(lambda: jax.block_until_ready(jax.device_put(src)))
-    return (nbytes / 4) / dt  # words (f32) per second
-
-
-def measure_fetch_model() -> tuple[float, float]:
-    """Two-point fit of the paper's Fig. 4 size effect: t(C) = t0 + C/BW.
-
-    Returns (words_per_s_asymptotic, t0_seconds) — small tokens pay the fixed
-    per-fetch overhead t0, which is why the paper sizes tokens as large as
-    local memory allows.
-    """
-    times = {}
-    for nbytes in (1 << 16, 1 << 26):
-        src = np.random.default_rng(0).standard_normal(nbytes // 4).astype(np.float32)
-        times[nbytes] = _time(lambda s=src: jax.block_until_ready(jax.device_put(s)),
-                              repeats=9)
-    c1, c2 = (1 << 16) / 4, (1 << 26) / 4
-    t1, t2 = times[1 << 16], times[1 << 26]
-    bw = (c2 - c1) / max(t2 - t1, 1e-12)          # words/s
-    t0 = max(t1 - c1 / bw, 0.0)
-    return bw, t0
-
-
-def measure_hyperstep_latency() -> float:
-    """Per-hyperstep fixed overhead (seconds) — the host's l.
-
-    The paper's l is the barrier cost (136 FLOPs ≈ 0.3 µs on Epiphany); on
-    this host the analogue is the python/jit dispatch + thread handoff per
-    hyperstep, measured with near-empty tokens.
-    """
-    from repro.core.hyperstep import HyperstepRunner
-    from repro.core.stream import StreamSet
-    ss = StreamSet()
-    data = np.zeros(16 * 64, np.float32)
-    s1 = ss.create(data, 16)
-    # a near-empty *jitted* step on a device token: captures the real
-    # per-hyperstep overhead (dispatch + staging + thread handoff), which is
-    # the host's barrier analogue
-    tiny = jax.jit(lambda acc, t: acc + t.sum())
-    runner = HyperstepRunner(lambda acc, t: tiny(acc, t[0]), [s1],
-                             prefetch=False, device=jax.devices()[0])
-    runner.run(jnp.float32(0.0))
-    return float(np.median([r.step_seconds for r in runner.records]))
-
-
-def calibrate(p: int = 1) -> BSPAccelerator:
-    r = measure_flops_rate()
-    words_per_s = measure_external_bandwidth()
-    e = r / words_per_s  # FLOPs per word
-    l = measure_hyperstep_latency() * r
-    return BSPAccelerator(
-        p=p, g=0.0, l=l, r=r, e=e,
-        L=(1 << 25) // 4, E=(1 << 34) // 4,  # ~L3-ish local, RAM external
-        word_bytes=4, name="container-host",
-    )
+__all__ = [
+    "calibrate",
+    "measure_flops_rate",
+    "measure_external_bandwidth",
+    "measure_fetch_model",
+    "measure_hyperstep_latency",
+]

@@ -18,7 +18,6 @@ import numpy as np
 
 from benchmarks.calibrate import calibrate
 from repro.core import StreamSet
-from repro.kernels import ops
 
 
 def bsps_cannon(a: np.ndarray, b: np.ndarray, m_blocks: int):

@@ -15,7 +15,6 @@ Run: PYTHONPATH=src python examples/bsps_spmv.py [n] [density]
 import sys
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

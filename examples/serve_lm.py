@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.launch.serve import make_prefill
 from repro.models import model as M
 from repro.train.steps import make_serve_step
 
@@ -39,11 +40,9 @@ def main() -> None:
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
 
-    # prefill via decode steps (streaming the prompt through the cache)
+    # prefill: the whole prompt in one jitted dispatch (scan of decode steps)
     t0 = time.perf_counter()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = serve(params, cache, {"tokens": prompt[:, t:t + 1]})
+    logits, cache = make_prefill(cfg)(params, cache, prompt.astype(jnp.int32))
     jax.block_until_ready(logits)
     prefill_s = time.perf_counter() - t0
 

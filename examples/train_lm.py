@@ -11,7 +11,6 @@ Kill it mid-run and re-run with the same --ckpt-dir: it resumes exactly.
 """
 
 import argparse
-import dataclasses
 
 from repro.configs.base import Block, ModelConfig
 from repro.data.pipeline import DataConfig

@@ -55,24 +55,45 @@ class SuperstepCost:
 
 @dataclasses.dataclass(frozen=True)
 class HyperstepCost:
-    """One hyperstep: its BSP program cost and the per-core prefetch volume.
+    """One hyperstep: its BSP program cost and the per-core stream volume.
 
-    ``fetch_words[s]`` = Σ_{i ∈ O_s} C_i — total words core s streams down for
-    the *next* hyperstep (paper Eq. 1).
+    Eq. 1 sums C_i over *all* opened streams O_s of core s — down *and* up.
+    ``fetch_words[s]`` is the volume core s streams down for the *next*
+    hyperstep; ``writeback_words[s]`` is the volume of finished output tokens
+    it streams up during this hyperstep. Both ride the same external link, so
+    the link side of the ``max`` is their sum.
     """
 
     bsp_flops: float
     fetch_words: Sequence[float]
+    writeback_words: Sequence[float] = ()
 
     def fetch_cost(self, acc: BSPAccelerator) -> float:
         return acc.e * max(self.fetch_words, default=0.0)
 
+    def writeback_cost(self, acc: BSPAccelerator) -> float:
+        return acc.e * max(self.writeback_words, default=0.0)
+
+    def link_cost(self, acc: BSPAccelerator) -> float:
+        """e · max_s Σ_{i ∈ O_s} C_i over both stream directions (Eq. 1).
+
+        The max is over each core's *combined* down+up volume — a core heavy
+        on fetch and another heavy on write-back do not add up across cores.
+        """
+        fw, ww = list(self.fetch_words), list(self.writeback_words)
+        n = max(len(fw), len(ww))
+        if n == 0:
+            return 0.0
+        fw += [0.0] * (n - len(fw))
+        ww += [0.0] * (n - len(ww))
+        return acc.e * max(f + w for f, w in zip(fw, ww))
+
     def cost(self, acc: BSPAccelerator) -> float:
-        return max(self.bsp_flops, self.fetch_cost(acc))
+        return max(self.bsp_flops, self.link_cost(acc))
 
     def bandwidth_heavy(self, acc: BSPAccelerator) -> bool:
-        """True if fetching the next tokens dominates (paper §2)."""
-        return self.fetch_cost(acc) > self.bsp_flops
+        """True if moving tokens (either direction) dominates (paper §2)."""
+        return self.link_cost(acc) > self.bsp_flops
 
 
 def bsp_cost(supersteps: Sequence[SuperstepCost], machine: BSPComputer) -> float:

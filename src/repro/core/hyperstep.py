@@ -2,24 +2,36 @@
 
 A hyperstep is (1) an ordinary BSP program run on the tokens currently resident
 in local memory, concurrent with (2) the asynchronous fetch of the tokens for the
-next hyperstep. A bulk synchronisation separates hypersteps: no core starts
-hyperstep h+1 before every core has its tokens for h+1 resident.
+next hyperstep and (3) the asynchronous write-back of the previous hyperstep's
+finished output tokens. A bulk synchronisation separates hypersteps: no core
+starts hyperstep h+1 before every core has its tokens for h+1 resident and its
+outputs of h-1 safely in external memory.
 
 This module realises that schedule at the host/JAX level:
 
 * "local memory" = device buffers; "external memory" = the stream backing store;
-* the async DMA engine = a background prefetch thread (one, like the single DMA
-  engine per Epiphany core) that stages the next tokens while the current
-  compute callable runs;
-* the bulk synchronisation = joining the prefetch future + blocking on the
-  compute result before advancing.
+* the async DMA engine = a background thread (one, like the single DMA engine
+  per Epiphany core) that stages the next tokens *and* drains finished output
+  tokens (``bsp_stream_move_up``) while the current compute callable runs;
+* the bulk synchronisation = joining the DMA lane + blocking on the compute
+  result before advancing.
 
 The same schedule appears one level down in ``kernels/`` where Pallas grid
-pipelining overlaps the HBM→VMEM copy of block i+1 with compute on block i.
+pipelining overlaps the HBM→VMEM copy of block i+1 (and the VMEM→HBM drain of
+output block i-1) with compute on block i.
 
-The executor records per-hyperstep wall times split into compute / fetch so the
-benchmarks can validate the BSPS cost model's ``max(T_h, e·ΣC_i)`` prediction
-(the paper's Fig. 5 methodology). Give the runner the run's
+Streams need not all advance at the same rate: ``rates[i]`` tokens of stream i
+are consumed per hyperstep — rate-0 streams are resident operands fetched once
+before hyperstep 0, rate-k streams deliver a k-token block each step (the
+paper's freedom to size C_i per stream).
+
+The executor records per-hyperstep wall times split into compute / fetch /
+write-back — the fetch and write-back durations are measured *inside* the DMA
+lane, so they are real link-busy times even when fully hidden behind compute —
+plus ``fetch_wait_seconds``, the slice of the bulk sync actually spent waiting
+on the lane. That lets the benchmarks validate the BSPS cost model's
+``max(T_h, e·ΣC_i)`` prediction (the paper's Fig. 5 methodology) against
+measured quantities. Give the runner the run's
 :class:`~repro.core.plan.StreamPlan` (see :func:`repro.core.plan.host_plan`)
 and the machine's :class:`~repro.core.bsp.BSPAccelerator` and it prices the
 run with the same Eq. 1 used one level down for the Pallas kernels —
@@ -35,6 +47,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bsp import BSPAccelerator
 from repro.core.plan import StreamPlan
@@ -45,17 +59,28 @@ __all__ = ["HyperstepRecord", "HyperstepRunner", "run_bsps"]
 
 @dataclasses.dataclass
 class HyperstepRecord:
-    """Timing of one hyperstep: the two overlapped operations + the step total."""
+    """Timing of one hyperstep: the overlapped operations + the step total.
+
+    ``fetch_seconds`` / ``writeback_seconds`` are lane-busy durations measured
+    inside the DMA thread (real link time, even when hidden behind compute);
+    ``fetch_wait_seconds`` is how long the bulk sync blocked on the lane after
+    compute finished — >0 means the link, not the core, gated this step.
+    Write-back of step h's outputs overlaps step h+1's compute, so its fields
+    are filled in when that later bulk sync joins the lane.
+    """
 
     index: int
     compute_seconds: float
     fetch_seconds: float
     step_seconds: float
     fetch_words: int
+    fetch_wait_seconds: float = 0.0
+    writeback_seconds: float = 0.0
+    writeback_words: int = 0
 
     @property
     def bandwidth_heavy(self) -> bool:
-        return self.fetch_seconds > self.compute_seconds
+        return self.fetch_seconds + self.writeback_seconds > self.compute_seconds
 
 
 def _block(x: Any) -> Any:
@@ -63,15 +88,60 @@ def _block(x: Any) -> Any:
     return jax.block_until_ready(x) if jax.tree_util.tree_leaves(x) else x
 
 
-def _fetch(streams: Sequence[Stream], core: int, device: Any | None) -> list[Any]:
-    """Stage the next token of each open stream into 'local memory'."""
+def _concat(toks: Sequence[Any]) -> Any:
+    """Merge a rate-k stream's k tokens into one block along the token axis.
+
+    Tokens may be arrays or pytrees of arrays (e.g. a BatchStream's
+    tokens/labels dict) — leaves are concatenated leaf-wise.
+    """
+    if len(toks) == 1:
+        return toks[0]
+
+    def cat(*leaves: Any) -> Any:
+        if isinstance(leaves[0], jax.Array):
+            return jnp.concatenate(leaves, axis=0)
+        return np.concatenate(leaves, axis=0)
+
+    return jax.tree_util.tree_map(cat, *toks)
+
+
+def _fetch(
+    streams: Sequence[Stream],
+    rates: Sequence[int],
+    core: int,
+    device: Any | None,
+) -> tuple[list[Any], float]:
+    """Stage the next token block of each advancing stream into local memory.
+
+    Returns (tokens, seconds): one entry per *advancing* (rate > 0) stream, in
+    stream order, plus the in-thread duration — the lane-busy time.
+    """
+    t0 = time.perf_counter()
     toks = []
-    for s in streams:
-        tok = s.move_down(core)
+    for s, rate in zip(streams, rates):
+        if rate <= 0:
+            continue
+        tok = _concat([s.move_down(core) for _ in range(rate)])
         if device is not None:
             tok = jax.device_put(tok, device)
         toks.append(_block(tok))
-    return toks
+    return toks, time.perf_counter() - t0
+
+
+def _writeback(
+    out_streams: Sequence[Stream], core: int, out_tokens: Sequence[Any]
+) -> tuple[int, float]:
+    """Drain finished output tokens up the external link (bulk move_up).
+
+    Returns (words, seconds) measured in-thread. ``move_up`` reports the words
+    it actually moved, so sparse up-streams (checkpoint every k steps) cost 0
+    on the steps they skip.
+    """
+    t0 = time.perf_counter()
+    words = 0
+    for s, tok in zip(out_streams, out_tokens):
+        words += int(s.move_up(core, tok) or 0)
+    return words, time.perf_counter() - t0
 
 
 class HyperstepRunner:
@@ -81,15 +151,28 @@ class HyperstepRunner:
     ----------
     step:
         The hyperstep's BSP program. Called with the resident tokens (one per
-        stream, in stream order); should be jitted for realistic overlap.
+        advancing stream, in stream order, resident rate-0 tokens included at
+        their stream position); should be jitted for realistic overlap. With
+        ``out_streams`` given, must return ``(state, out_tokens)`` — one token
+        per out stream (``None`` skips that stream's write for this hyperstep,
+        advancing its cursor for free).
     streams:
-        The open streams of this core (``O_s``); all are advanced each
-        hyperstep. Use :meth:`Stream.seek` inside ``on_hyperstep_end`` for the
+        The open down-streams of this core (``O_s``). ``rates[i]`` tokens of
+        stream i are consumed per hyperstep (default 1 each); rate 0 marks a
+        resident operand — fetched once before hyperstep 0, never advanced.
+        Use :meth:`Stream.seek` inside ``on_hyperstep_end`` for the
         pseudo-streaming access patterns (e.g. Cannon's ``MOVE`` calls).
+    out_streams:
+        Up-streams written back each hyperstep (``bsp_stream_move_up``). The
+        write-back of hyperstep h rides the same single DMA lane as the
+        prefetch, overlapped with hyperstep h+1's compute and joined at its
+        bulk sync. Out tokens are consumed on the lane concurrently with that
+        compute — a step that donates its inputs must hand over tokens that do
+        not alias them (e.g. a host snapshot).
     prefetch:
-        If True (default) overlap next-token fetch with current compute — the
-        defining feature of a hyperstep. If False, run serially (reference
-        semantics; used by tests to check prefetching changes timing only).
+        If True (default) overlap next-token fetch / write-back with compute —
+        the defining feature of a hyperstep. If False, run serially (reference
+        semantics; used by tests to check overlap changes timing only).
     plan / machine:
         Optional :class:`StreamPlan` describing this run (see
         :func:`repro.core.plan.host_plan`) and the
@@ -100,10 +183,12 @@ class HyperstepRunner:
 
     def __init__(
         self,
-        step: Callable[[Any, Sequence[Any]], Any],
+        step: Callable[..., Any],
         streams: Sequence[Stream],
         *,
         core: int = 0,
+        rates: Sequence[int] | None = None,
+        out_streams: Sequence[Stream] = (),
         prefetch: bool = True,
         device: Any | None = None,
         on_hyperstep_end: Callable[[int, Sequence[Stream]], None] | None = None,
@@ -112,6 +197,14 @@ class HyperstepRunner:
     ) -> None:
         self._step = step
         self._streams = list(streams)
+        self._rates = list(rates) if rates is not None else [1] * len(self._streams)
+        if len(self._rates) != len(self._streams):
+            raise ValueError(
+                f"rates has {len(self._rates)} entries for "
+                f"{len(self._streams)} streams")
+        if any(r < 0 for r in self._rates):
+            raise ValueError(f"rates must be >= 0, got {self._rates}")
+        self._out_streams = list(out_streams)
         self._core = core
         self._prefetch = prefetch
         self._device = device
@@ -119,6 +212,37 @@ class HyperstepRunner:
         self.plan = plan
         self.machine = machine
         self.records: list[HyperstepRecord] = []
+
+    # -- schedule helpers ----------------------------------------------------
+
+    def _remaining(self) -> int | None:
+        """Hypersteps the streams can still supply (None if nothing advances)."""
+        budgets = [
+            (s.num_tokens - s.cursor) // r
+            for s, r in zip(self._streams, self._rates) if r > 0
+        ]
+        budgets += [s.num_tokens - s.cursor for s in self._out_streams]
+        return min(budgets) if budgets else None
+
+    def _resolve_total(self, num_hypersteps: int | None) -> int:
+        if num_hypersteps is not None:
+            return num_hypersteps
+        remaining = self._remaining()
+        if self.plan is not None:
+            # a plan sets the target count but can never outrun the
+            # streams (cursors may have moved since it was built)
+            total = self.plan.num_hypersteps
+            return total if remaining is None else min(total, remaining)
+        if remaining is None:
+            raise ValueError("need streams, a plan, or an explicit num_hypersteps")
+        return remaining
+
+    def _assemble(self, resident: list[Any], fetched: list[Any]) -> list[Any]:
+        """Interleave resident (rate-0) tokens with freshly fetched ones."""
+        toks, it = [], iter(fetched)
+        for idx, rate in enumerate(self._rates):
+            toks.append(resident[idx] if rate == 0 else next(it))
+        return toks
 
     def run(self, state: Any, num_hypersteps: int | None = None) -> Any:
         """Execute hypersteps until streams are exhausted (or a fixed count).
@@ -130,34 +254,45 @@ class HyperstepRunner:
         # One background lane, like the single DMA engine per Epiphany core;
         # per-run so the runner can be reused after the lane shuts down.
         self._dma = ThreadPoolExecutor(max_workers=1, thread_name_prefix="bsps-dma")
-        for s in self._streams:
+        for s in [*self._streams, *self._out_streams]:
             s.open(self._core)
+        wb_fut: Future | None = None
+        wb_idx = -1
+
+        def join_writeback() -> None:
+            nonlocal wb_fut
+            if wb_fut is None:
+                return
+            words, seconds = wb_fut.result()
+            if 0 <= wb_idx < len(self.records):
+                rec = self.records[wb_idx]
+                rec.writeback_seconds = seconds
+                rec.writeback_words = words
+            wb_fut = None
+
         try:
-            total = num_hypersteps
-            if total is None:
-                remaining = min(
-                    (s.num_tokens - s.cursor for s in self._streams),
-                    default=None,
-                )
-                if self.plan is not None:
-                    # a plan sets the target count but can never outrun the
-                    # streams (cursors may have moved since it was built)
-                    total = self.plan.num_hypersteps
-                    if remaining is not None:
-                        total = min(total, remaining)
-                else:
-                    if remaining is None:
-                        raise ValueError(
-                            "need streams, a plan, or an explicit num_hypersteps"
-                        )
-                    total = remaining
+            total = self._resolve_total(num_hypersteps)
             if total <= 0:
                 return state
 
-            # Hyperstep 0's tokens are assumed resident at program start (paper §2).
-            resident = _fetch(self._streams, self._core, self._device)
+            # Hyperstep 0's tokens are assumed resident at program start
+            # (paper §2); rate-0 operands are fetched here, once, and reused.
+            residents: list[Any] = []
+            for s, r in zip(self._streams, self._rates):
+                if r != 0:
+                    residents.append(None)
+                    continue
+                tok = s.move_down(self._core)
+                if self._device is not None:
+                    tok = jax.device_put(tok, self._device)
+                residents.append(_block(tok))
+            fetched, _ = _fetch(self._streams, self._rates, self._core, self._device)
+            resident = self._assemble(residents, fetched)
             if self._on_end:
                 self._on_end(0, self._streams)
+
+            step_fetch_words = sum(
+                s.token_words * r for s, r in zip(self._streams, self._rates))
 
             for h in range(total):
                 t0 = time.perf_counter()
@@ -166,25 +301,44 @@ class HyperstepRunner:
                 if not last:
                     if self._prefetch:
                         fut = self._dma.submit(
-                            _fetch, self._streams, self._core, self._device
+                            _fetch, self._streams, self._rates, self._core,
+                            self._device,
                         )
                     else:
-                        t_f = time.perf_counter()
-                        nxt = _fetch(self._streams, self._core, self._device)
-                        fetch_s = time.perf_counter() - t_f
+                        nxt, fetch_s = _fetch(
+                            self._streams, self._rates, self._core, self._device)
 
                 t_c = time.perf_counter()
-                state = _block(self._step(state, resident))
+                out = self._step(state, resident)
+                if self._out_streams:
+                    state, out_tokens = out
+                else:
+                    state, out_tokens = out, ()
+                state = _block(state)
                 compute_s = time.perf_counter() - t_c
 
+                wait_s = 0.0
                 if not last:
                     if fut is not None:
                         t_w = time.perf_counter()
-                        nxt = fut.result()  # bulk synchronisation
-                        fetch_s = compute_s + (time.perf_counter() - t_w)
-                    resident = nxt
+                        nxt, fetch_s = fut.result()  # bulk synchronisation
+                        wait_s = time.perf_counter() - t_w
+                    resident = self._assemble(residents, nxt)
                 else:
                     fetch_s = 0.0
+
+                # join the *previous* write-back (it overlapped this compute),
+                # then put this step's outputs on the lane for the next overlap
+                join_writeback()
+                if self._out_streams:
+                    if self._prefetch:
+                        # absolute index: records accumulate across run() calls
+                        wb_idx = len(self.records)
+                        wb_fut = self._dma.submit(
+                            _writeback, self._out_streams, self._core, out_tokens)
+                    else:
+                        words, seconds = _writeback(
+                            self._out_streams, self._core, out_tokens)
 
                 self.records.append(
                     HyperstepRecord(
@@ -192,20 +346,27 @@ class HyperstepRunner:
                         compute_seconds=compute_s,
                         fetch_seconds=fetch_s,
                         step_seconds=time.perf_counter() - t0,
-                        fetch_words=sum(s.token_words for s in self._streams)
-                        if not last else 0,
+                        fetch_words=step_fetch_words if not last else 0,
+                        fetch_wait_seconds=wait_s,
+                        writeback_seconds=0.0 if self._prefetch else (
+                            seconds if self._out_streams else 0.0),
+                        writeback_words=0 if self._prefetch else (
+                            words if self._out_streams else 0),
                     )
                 )
                 if self._on_end and not last:
                     # Cursor adjustments (seek/MOVE) for the *following* fetch.
                     self._on_end(h + 1, self._streams)
+            join_writeback()
             return state
         finally:
-            # join any in-flight fetch *before* closing: close() rewinds the
-            # cursors, and a background move_down landing afterwards would
-            # corrupt the replay state of the next run()
+            # join any in-flight DMA work *before* closing: close() rewinds
+            # the cursors, and a background move_down/move_up landing
+            # afterwards would corrupt the replay state of the next run()
             self._dma.shutdown(wait=True)
-            for s in self._streams:
+            if wb_fut is not None:
+                join_writeback()
+            for s in [*self._streams, *self._out_streams]:
                 s.close(self._core)
 
     @property
@@ -244,30 +405,24 @@ class HyperstepRunner:
         }
 
     def _measured_bandwidth_heavy(self) -> bool:
-        """Majority vote over the hypersteps that actually fetched.
+        """Majority vote over the hypersteps that actually moved tokens.
 
-        In prefetch mode ``fetch_seconds`` records ``max(compute, fetch)`` (the
-        lane is joined only after compute), so the raw ``r.bandwidth_heavy``
-        comparison is degenerate there; fetch dominated a step only if compute
-        finished and then *waited* on the lane for a non-trivial slice of the
-        step. Serial mode measures the two phases independently, where the
-        direct comparison is meaningful.
+        The fetch and write-back durations are measured inside the DMA lane,
+        so the vote compares real link-busy time against real compute time in
+        both prefetch and serial mode — a step is bandwidth heavy when the
+        link outworked the core (paper §2), whether or not the overlap hid it.
         """
-        # vote only on hypersteps that fetched (each run's terminal record
+        # vote only on hypersteps that moved data (each run's terminal record
         # has fetch_words=0 — records accumulate across repeated run() calls)
-        recs = [r for r in self.records if r.fetch_words > 0] or self.records
-        if self._prefetch:
-            votes = [
-                r.fetch_seconds - r.compute_seconds > 0.05 * r.step_seconds
-                for r in recs
-            ]
-        else:
-            votes = [r.bandwidth_heavy for r in recs]
+        recs = [
+            r for r in self.records if r.fetch_words > 0 or r.writeback_words > 0
+        ] or self.records
+        votes = [r.bandwidth_heavy for r in recs]
         return sum(votes) > len(votes) / 2
 
 
 def run_bsps(
-    step: Callable[[Any, Sequence[Any]], Any],
+    step: Callable[..., Any],
     streams: Sequence[Stream],
     state: Any,
     **kwargs: Any,

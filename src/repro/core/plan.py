@@ -27,6 +27,12 @@ resident block index actually changes, so revisited tokens are free exactly
 like a cursor seek that stays put. Skipped work (the paper's "we are allowed
 to revisit or skip tokens") is expressed by a per-hyperstep ``flops`` callable
 that may return 0 for masked-out steps (causal attention).
+
+Streams are bidirectional (paper §4: ``bsp_stream_move_up`` writes results
+back): every :class:`TokenSpec` carries a ``direction``, Eq. 1 charges the up
+side through :meth:`StreamPlan.writeback_schedule` exactly as it charges the
+fetch side, and a per-hyperstep advance ``rate`` distinguishes resident
+operands (rate 0) from streams that consume several tokens per hyperstep.
 """
 
 from __future__ import annotations
@@ -72,6 +78,16 @@ class TokenSpec:
     Non-injective maps encode token reuse (``MOVE``); a constant map encodes a
     fully resident operand (fetched once, hyperstep 0).
 
+    ``direction`` is the side of the external link the token moves on:
+    ``"down"`` tokens are prefetched (``bsp_stream_move_down``), ``"up"``
+    tokens are finished results written back (``bsp_stream_move_up``). Eq. 1
+    prices both — the same C_i charge, opposite direction, one shared link.
+
+    ``rate`` is the per-hyperstep cursor advance at the host level: rate-0
+    tokens are resident operands (fetched once, single-buffered — no prefetch
+    buffer needed), rate-k tokens advance k stream tokens per hyperstep. At
+    the chip level the index map is authoritative and ``rate`` is descriptive.
+
     ``full_shape`` is the backing array's shape in external memory — required
     for output tokens (it becomes the ``out_shape`` of the lowered call),
     optional for inputs.
@@ -82,6 +98,14 @@ class TokenSpec:
     index_map: Callable[..., tuple[int, ...]]
     dtype: Any = jnp.float32
     full_shape: tuple[int, ...] | None = None
+    direction: str = "down"
+    rate: int = 1
+
+    def __post_init__(self) -> None:
+        if self.direction not in ("down", "up"):
+            raise ValueError(f"direction must be 'down' or 'up', got {self.direction!r}")
+        if self.rate < 0:
+            raise ValueError(f"rate must be >= 0, got {self.rate}")
 
     @property
     def words(self) -> int:
@@ -91,6 +115,11 @@ class TokenSpec:
     @property
     def nbytes(self) -> int:
         return self.words * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def resident(self) -> bool:
+        """Rate-0 tokens stay in local memory for the whole pass."""
+        return self.rate == 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,8 +159,11 @@ class StreamPlan:
     dimension_semantics: tuple[str, ...] = ()
     flops_per_hyperstep: float | Callable[..., float] = 0.0
     mean_flops_per_hyperstep: float | None = None
-    # memoised fetch schedule — the plan is frozen, the walk is O(grid)
+    # memoised fetch/write-back schedules — the plan is frozen, walks are O(grid)
     _fetch_cache: list | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _writeback_cache: list | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
     )
 
@@ -140,7 +172,12 @@ class StreamPlan:
             raise ValueError(f"bad grid {self.grid}")
         if self.dimension_semantics and len(self.dimension_semantics) != len(self.grid):
             raise ValueError("dimension_semantics must match grid rank")
+        for t in self.inputs:
+            if t.direction != "down":
+                raise ValueError(f"input token {t.name!r} must have direction 'down'")
         for t in self.outputs:
+            if t.direction != "up":
+                raise ValueError(f"output token {t.name!r} must have direction 'up'")
             if t.full_shape is None:
                 raise ValueError(f"output token {t.name!r} needs full_shape")
 
@@ -183,20 +220,57 @@ class StreamPlan:
         object.__setattr__(self, "_fetch_cache", fetched)
         return fetched
 
+    def writeback_schedule(self) -> list[int]:
+        """Words streamed *up* at each hyperstep (``bsp_stream_move_up``).
+
+        An output block is flushed over the external link when the plan moves
+        off it: the enumerated schedule charges ``C_i`` on hypersteps whose
+        output block index changes (the flush of the finished block overlaps
+        that step's compute, like the prefetch it shares the link with), and
+        the final hyperstep flushes every output's last block. Non-injective
+        output maps therefore price revisited result blocks exactly once per
+        visit run, symmetric with :meth:`fetch_schedule`.
+        """
+        if self._writeback_cache is not None:
+            return self._writeback_cache
+        if self.num_hypersteps > ENUMERATION_LIMIT:
+            raise ValueError(
+                f"{self.name}: {self.num_hypersteps} hypersteps exceeds the "
+                f"enumeration limit {ENUMERATION_LIMIT}; use cost(exact=False)"
+            )
+        written = [0] * self.num_hypersteps
+        prev: list[tuple[int, ...] | None] = [None] * len(self.outputs)
+        for h, coords in enumerate(itertools.product(*(range(g) for g in self.grid))):
+            for idx, tok in enumerate(self.outputs):
+                block = tuple(tok.index_map(*coords))
+                if prev[idx] is not None and block != prev[idx]:
+                    written[h] += tok.words
+                prev[idx] = block
+        if written:
+            written[-1] += sum(t.words for t in self.outputs)
+        object.__setattr__(self, "_writeback_cache", written)
+        return written
+
     def hyperstep_costs(self) -> list[HyperstepCost]:
         """Exact per-hyperstep costs for :func:`repro.core.cost.bsps_cost`.
 
         Eq. 1 charges hyperstep h with the fetch of hyperstep h+1's tokens
         (hyperstep 0's tokens are resident at program start), so the arrival
-        schedule is shifted by one.
+        schedule is shifted by one; write-backs are charged on the hyperstep
+        whose compute they overlap (see :meth:`writeback_schedule`).
         """
         arrivals = self.fetch_schedule()
+        writebacks = self.writeback_schedule()
         coords_iter = itertools.product(*(range(g) for g in self.grid))
         costs = []
         for h, coords in enumerate(coords_iter):
             nxt = arrivals[h + 1] if h + 1 < len(arrivals) else 0
             costs.append(
-                HyperstepCost(bsp_flops=self._flops_at(coords), fetch_words=[float(nxt)])
+                HyperstepCost(
+                    bsp_flops=self._flops_at(coords),
+                    fetch_words=[float(nxt)],
+                    writeback_words=[float(writebacks[h])],
+                )
             )
         return costs
 
@@ -229,16 +303,20 @@ class StreamPlan:
     def cost(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
         """Predicted T̃ in FLOP units (paper Eq. 1) on accelerator ``acc``.
 
-        ``exact=None`` enumerates the fetch schedule when the grid is small
-        enough, else uses the closed-form estimate ``H · max(mean_flops,
-        e·ΣC_i)`` — every streamed token charged every hyperstep, per-step
-        work averaged (see the ENUMERATION_LIMIT note on its bias).
+        Eq. 1 sums C_i over *all* opened streams, up and down: the link side
+        of each hyperstep's ``max`` is its prefetch volume plus its write-back
+        volume. ``exact=None`` enumerates both schedules when the grid is
+        small enough, else uses the closed-form estimate ``H · max(mean_flops,
+        e·ΣC_i)`` — every streamed token, down *and* up, charged every
+        hyperstep, per-step work averaged (see the ENUMERATION_LIMIT note on
+        its bias).
         """
         if exact is None:
             exact = self.num_hypersteps <= ENUMERATION_LIMIT
         if exact:
             return bsps_cost(self.hyperstep_costs(), acc)
-        words = float(sum(t.words for t in self.inputs))
+        words = float(sum(t.words for t in self.inputs)
+                      + sum(t.words for t in self.outputs))
         return self.num_hypersteps * max(self.mean_flops, acc.e * words)
 
     def predicted_seconds(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
@@ -251,27 +329,41 @@ class StreamPlan:
             return float(sum(t.words for t in self.inputs)) * self.num_hypersteps
         return float(sum(self.fetch_schedule()))
 
+    def total_writeback_words(self, *, exact: bool | None = None) -> float:
+        """Words streamed up over the whole pass (closed form: every up-token
+        every hyperstep, symmetric with the fetch side's over-count)."""
+        if exact is None:
+            exact = self.num_hypersteps <= ENUMERATION_LIMIT
+        if not exact:
+            return float(sum(t.words for t in self.outputs)) * self.num_hypersteps
+        return float(sum(self.writeback_schedule()))
+
     def bandwidth_heavy(self, acc: BSPAccelerator, *, exact: bool | None = None) -> bool:
-        """True if streaming the tokens costs more than computing on them
-        (paper §2 criterion, summed over the whole pass). ``exact=False``
-        stays O(1) on both sides of the comparison."""
+        """True if streaming the tokens — down *or* up — costs more than
+        computing on them (paper §2 criterion, summed over the whole pass).
+        ``exact=False`` stays O(1) on both sides of the comparison."""
         flops = (
             self.mean_flops * self.num_hypersteps
             if exact is False else self.total_flops
         )
-        return acc.e * self.total_fetch_words(exact=exact) > flops
+        link_words = (self.total_fetch_words(exact=exact)
+                      + self.total_writeback_words(exact=exact))
+        return acc.e * link_words > flops
 
     # -- local-memory accounting --------------------------------------------
 
     @property
     def input_token_bytes(self) -> int:
-        """Streamed input tokens, double-buffered (paper: prefetch halves L)."""
-        return 2 * sum(t.nbytes for t in self.inputs)
+        """Streamed input tokens, double-buffered (paper: prefetch halves L);
+        rate-0 (resident) tokens need no prefetch buffer and count once."""
+        return sum(t.nbytes if t.resident else 2 * t.nbytes for t in self.inputs)
 
     @property
     def output_token_bytes(self) -> int:
-        """Output tokens also ride the revolving pipeline buffers."""
-        return 2 * sum(t.nbytes for t in self.outputs)
+        """Output tokens also ride the revolving pipeline buffers (a finished
+        block drains while the next fills); write-once (rate-0) outputs such
+        as a final scalar need only the single buffer."""
+        return sum(t.nbytes if t.resident else 2 * t.nbytes for t in self.outputs)
 
     @property
     def scratch_bytes(self) -> int:
@@ -297,46 +389,108 @@ class StreamPlan:
 # ---------------------------------------------------------------------------
 
 
+def _stream_token_shape(s: Any) -> tuple[int, ...]:
+    """Per-token shape of a stream, duck-typed.
+
+    ``Stream`` exposes :attr:`~repro.core.stream.Stream.token_shape`; stream
+    adapters (e.g. :class:`repro.data.pipeline.BatchStream`) provide the same
+    protocol without a backing array.
+    """
+    if hasattr(s, "token_shape"):
+        return tuple(s.token_shape)
+    return (s.token_size,) + tuple(s.data.shape[1:])
+
+
+def _stream_dtype(s: Any) -> Any:
+    if hasattr(s, "dtype"):
+        return s.dtype
+    return s.data.dtype
+
+
 def host_plan(
     streams: Sequence[Any],
     *,
     flops_per_hyperstep: float | Callable[..., float],
     name: str = "host",
     num_hypersteps: int | None = None,
+    rates: Sequence[int] | None = None,
+    out_streams: Sequence[Any] = (),
+    out_every: Sequence[int] | None = None,
+    scratch: tuple[ScratchSpec, ...] = (),
 ) -> StreamPlan:
     """Build a pod/host-level StreamPlan from open-able ``Stream`` objects.
 
-    One grid axis — the hyperstep count (default: until the shortest stream is
-    exhausted, matching :class:`HyperstepRunner`); one TokenSpec per stream
-    with the stream's own token shape and the identity index map (tokens are
-    consumed in cursor order). The resulting plan prices a
-    ``HyperstepRunner`` run with the same Eq. 1 used one level down for the
-    Pallas kernels.
+    One grid axis — the hyperstep count (default: until the shortest advancing
+    stream is exhausted, matching :class:`HyperstepRunner`); one TokenSpec per
+    stream. ``rates[i]`` is the per-hyperstep cursor advance of down-stream i
+    (default 1): rate-0 streams become resident operands (constant index map,
+    fetched once), rate-k streams consume a k-token block per hyperstep.
+
+    ``out_streams`` are write-back (``move_up``) streams; ``out_every[j]``
+    says up-stream j completes one token every that-many hypersteps (default
+    1), expressed as the index map ``t -> t // every`` — the enumerated
+    schedule then charges the up-token only on hypersteps where the output
+    block index changes, exactly how a checkpoint written every k steps costs.
+
+    ``scratch`` declares persistent local state the program keeps between
+    hypersteps (e.g. a serving KV cache), so :attr:`StreamPlan.vmem_bytes`
+    budgets the host run like a kernel. The resulting plan prices a
+    :class:`~repro.core.hyperstep.HyperstepRunner` run with the same Eq. 1
+    used one level down for the Pallas kernels.
     """
-    if not streams:
-        raise ValueError("need at least one stream")
+    if not streams and not out_streams:
+        raise ValueError("need at least one stream (down or up)")
+    rates = list(rates) if rates is not None else [1] * len(streams)
+    if len(rates) != len(streams):
+        raise ValueError(f"rates has {len(rates)} entries for {len(streams)} streams")
+    out_every = list(out_every) if out_every is not None else [1] * len(out_streams)
+    if len(out_every) != len(out_streams):
+        raise ValueError(
+            f"out_every has {len(out_every)} entries for {len(out_streams)} streams")
+
     h = num_hypersteps
     if h is None:
-        h = min(s.num_tokens - s.cursor for s in streams)
+        budgets = [(s.num_tokens - s.cursor) // r
+                   for s, r in zip(streams, rates) if r > 0]
+        # the runner advances every up-stream cursor once per hyperstep;
+        # out_every only changes how often a *completed* token is priced
+        budgets += [s.num_tokens - s.cursor for s in out_streams]
+        if not budgets:
+            raise ValueError("all streams are resident; pass num_hypersteps")
+        h = min(budgets)
     if h <= 0:
         raise ValueError(f"no hypersteps to plan (h={h})")
-    tokens = []
-    for s in streams:
-        trailing = tuple(s.data.shape[1:])
-        tokens.append(
-            TokenSpec(
-                name=s.name or f"stream{s.stream_id}",
-                block_shape=(s.token_size,) + trailing,
-                index_map=lambda t, nt=len(trailing): (t,) + (0,) * nt,
-                dtype=s.data.dtype,
-                full_shape=tuple(s.data.shape),
-            )
+
+    def token(s: Any, rate: int, direction: str, every: int = 1) -> TokenSpec:
+        shape = _stream_token_shape(s)
+        trailing = shape[1:]
+        nt = len(trailing)
+        if direction == "down" and rate == 0:      # resident operand
+            block = shape
+            index_map = lambda t, nt=nt: (0,) * (nt + 1)
+        elif direction == "down":
+            block = (rate * shape[0],) + trailing
+            index_map = lambda t, nt=nt: (t,) + (0,) * nt
+        else:                                       # up: one token per `every` steps
+            block = shape
+            index_map = lambda t, e=every, nt=nt: (t // e,) + (0,) * nt
+        return TokenSpec(
+            name=s.name or f"stream{s.stream_id}",
+            block_shape=block,
+            index_map=index_map,
+            dtype=_stream_dtype(s),
+            full_shape=(s.num_tokens * shape[0],) + trailing,
+            direction=direction,
+            rate=rate,
         )
+
     return StreamPlan(
         name=name,
         grid=(h,),
-        inputs=tuple(tokens),
-        outputs=(),
+        inputs=tuple(token(s, r, "down") for s, r in zip(streams, rates)),
+        outputs=tuple(token(s, 1, "up", every=e)
+                      for s, e in zip(out_streams, out_every)),
+        scratch=scratch,
         dimension_semantics=("arbitrary",),
         flops_per_hyperstep=flops_per_hyperstep,
     )

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Stream", "StreamSet", "StreamClosedError", "StreamBusyError"]
+__all__ = ["Stream", "StreamSet", "StreamOwnership", "StreamClosedError",
+           "StreamBusyError"]
 
 
 class StreamClosedError(RuntimeError):
@@ -36,14 +37,60 @@ class StreamBusyError(RuntimeError):
     pass
 
 
+class StreamOwnership:
+    """The paper-§4 exclusivity handle: open/close with a single owner core.
+
+    "Streams can only be opened if they are not yet opened by another core."
+    Shared by :class:`Stream` and the duck-typed stream adapters
+    (:class:`repro.data.pipeline.BatchStream`,
+    :class:`repro.train.checkpoint.CheckpointStream`) so the state machine
+    exists exactly once. Subclasses provide ``token_size`` (returned by
+    ``open``, the §4 contract) and may override :meth:`_rewind`, called when
+    the stream is closed.
+    """
+
+    _owner: int | None = None
+
+    def _stream_label(self) -> str:
+        name = getattr(self, "name", "")
+        return name or f"stream {getattr(self, 'stream_id', '?')}"
+
+    def open(self, core: int) -> int:
+        """``bsp_stream_open`` — returns max token size in *elements*."""
+        if self._owner is not None and self._owner != core:
+            raise StreamBusyError(
+                f"{self._stream_label()} already opened by core {self._owner}")
+        self._owner = core
+        return self.token_size
+
+    def close(self, core: int) -> None:
+        """``bsp_stream_close`` — after closing any core can open it again."""
+        self._check_owner(core)
+        self._owner = None
+        self._rewind()
+
+    def _rewind(self) -> None:
+        """Cursor reset on close; adapters override as appropriate."""
+
+    def _check_owner(self, core: int) -> None:
+        if self._owner is None:
+            raise StreamClosedError(f"{self._stream_label()} is not open")
+        if self._owner != core:
+            raise StreamBusyError(
+                f"{self._stream_label()} owned by core {self._owner}, not {core}")
+
+
 @dataclasses.dataclass
-class Stream:
+class Stream(StreamOwnership):
     """A mutable pseudo-stream over a backing 1-D (or leading-axis) array.
 
     ``data``        backing array, tokens are equal slices along axis 0
                     (paper: "tokens of the i-th stream have constant size C_i").
     ``token_size``  C_i — elements per token along axis 0.
     ``stream_id``   creation-order id (paper §4).
+
+    ``open``/``close`` (and their exclusivity) come from
+    :class:`StreamOwnership`; closing rewinds the cursor.
     """
 
     data: Any
@@ -65,19 +112,7 @@ class Stream:
 
     # -- BSPlib-extension primitives (paper §4) ------------------------------
 
-    def open(self, core: int) -> int:
-        """``bsp_stream_open`` — returns max token size in *elements*."""
-        if self._owner is not None and self._owner != core:
-            raise StreamBusyError(
-                f"stream {self.stream_id} already opened by core {self._owner}"
-            )
-        self._owner = core
-        return self.token_size
-
-    def close(self, core: int) -> None:
-        """``bsp_stream_close`` — after closing any core can open it again."""
-        self._check_owner(core)
-        self._owner = None
+    def _rewind(self) -> None:
         self._cursor = 0
 
     def move_down(self, core: int, preload: bool = True) -> Any:
@@ -96,16 +131,33 @@ class Stream:
         self._cursor += 1
         return tok
 
-    def move_up(self, core: int, token: Any) -> None:
-        """``bsp_stream_move_up`` — write token at cursor, advance cursor."""
+    def move_up(self, core: int, token: Any) -> int:
+        """``bsp_stream_move_up`` — write token at cursor, advance cursor.
+
+        Returns the number of words written (C_i), so the runtime can account
+        write-back traffic per hyperstep. ``None`` tokens are a no-op seek —
+        the cursor advances but nothing moves on the link (0 words) — which
+        lets sparse up-streams (e.g. a checkpoint every k steps) share the
+        one-``move_up``-per-hyperstep schedule.
+        """
         self._check_owner(core)
+        if not 0 <= self._cursor < self.num_tokens:
+            raise IndexError(
+                f"stream {self.stream_id}: cursor {self._cursor} out of range "
+                f"[0, {self.num_tokens})"
+            )
+        if token is None:
+            self._cursor += 1
+            return 0
         lo = self._cursor * self.token_size
         hi = lo + self.token_size
         if isinstance(self.data, np.ndarray):
-            self.data[lo:hi] = np.asarray(token)
+            self.data[lo:hi] = np.asarray(token).reshape(self.data[lo:hi].shape)
         else:  # jax arrays are immutable — functional update
-            self.data = self.data.at[lo:hi].set(token)
+            self.data = self.data.at[lo:hi].set(
+                jnp.asarray(token).reshape(self.data[lo:hi].shape))
         self._cursor += 1
+        return self.token_words
 
     def seek(self, core: int, delta_tokens: int) -> None:
         """``bsp_stream_seek`` — move cursor *relative* (random access)."""
@@ -131,6 +183,15 @@ class Stream:
         return self.data.shape[0] // self.token_size
 
     @property
+    def token_shape(self) -> tuple[int, ...]:
+        """Shape of one token: (token_size,) + trailing dims of the backing."""
+        return (self.token_size,) + tuple(self.data.shape[1:])
+
+    @property
+    def dtype(self) -> Any:
+        return self.data.dtype
+
+    @property
     def token_words(self) -> int:
         """Words per token (C_i in the cost function): elements × trailing dims."""
         trailing = int(np.prod(self.data.shape[1:], dtype=np.int64)) if self.data.ndim > 1 else 1
@@ -139,14 +200,6 @@ class Stream:
     @property
     def exhausted(self) -> bool:
         return self._cursor >= self.num_tokens
-
-    def _check_owner(self, core: int) -> None:
-        if self._owner is None:
-            raise StreamClosedError(f"stream {self.stream_id} is not open")
-        if self._owner != core:
-            raise StreamBusyError(
-                f"stream {self.stream_id} owned by core {self._owner}, not {core}"
-            )
 
     def __iter__(self) -> Iterator[Any]:
         for i in range(self.num_tokens):

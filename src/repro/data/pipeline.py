@@ -21,7 +21,9 @@ from typing import Any, Iterator
 
 import numpy as np
 
-__all__ = ["DataConfig", "TokenStream", "Prefetcher"]
+from repro.core.stream import StreamOwnership
+
+__all__ = ["DataConfig", "TokenStream", "BatchStream", "Prefetcher"]
 
 
 @dataclasses.dataclass
@@ -61,6 +63,17 @@ class TokenStream:
     def state_dict(self) -> dict[str, Any]:
         return {"cursor": self._cursor, "seed": self.cfg.seed}
 
+    def state_at(self, n_batches: int) -> dict[str, Any]:
+        """State after exactly ``n_batches`` consumed batches.
+
+        Unlike :meth:`state_dict` this is immune to prefetch lookahead: a
+        checkpoint written after step t must record the cursor of batch t+1,
+        not wherever the background fetch has run ahead to — the BSPS restart
+        is a ``seek`` to a hyperstep boundary.
+        """
+        return {"cursor": self.cfg.host_index + n_batches * self.cfg.host_count,
+                "seed": self.cfg.seed}
+
     def load_state_dict(self, state: dict[str, Any]) -> None:
         self._cursor = int(state["cursor"])
 
@@ -88,11 +101,88 @@ class TokenStream:
             yield self.next_batch()
 
 
+class BatchStream(StreamOwnership):
+    """:class:`TokenStream` as a paper-§4 down-stream: one batch per token.
+
+    Speaks the :class:`repro.core.stream.Stream` protocol (open / move_down /
+    close / seek, exclusivity, cursor) without a materialised backing array —
+    tokens are generated on demand, so ``external memory`` here is the corpus
+    itself. This is what lets the training loop run through
+    :class:`repro.core.hyperstep.HyperstepRunner` and be priced by
+    :func:`repro.core.plan.host_plan` like any other stream program.
+
+    ``num_tokens`` bounds the run (the planned hyperstep count); the wrapped
+    TokenStream's cursor — not ours — is the durable data position, so
+    ``close()`` rewinds only the local hyperstep counter.
+    """
+
+    token_size = 1  # one batch per token
+
+    def __init__(self, stream: TokenStream, num_tokens: int, *,
+                 put_fn=None, name: str = "batches", stream_id: int = 0):
+        self._stream = stream
+        self._num = int(num_tokens)
+        self._put = put_fn or (lambda x: x)   # e.g. device_put + shard
+        self._cursor = 0
+        self._owner: int | None = None
+        self.name = name
+        self.stream_id = stream_id
+
+    # -- stream protocol (open/close/exclusivity from StreamOwnership) -------
+
+    def _rewind(self) -> None:
+        self._cursor = 0
+
+    def move_down(self, core: int) -> dict[str, Any]:
+        self._check_owner(core)
+        if not 0 <= self._cursor < self._num:
+            raise IndexError(
+                f"batch stream: cursor {self._cursor} out of range [0, {self._num})")
+        self._cursor += 1
+        return self._put(self._stream.next_batch())
+
+    def seek(self, core: int, delta_tokens: int) -> None:
+        self._check_owner(core)
+        new = self._cursor + delta_tokens
+        if not 0 <= new <= self._num:
+            raise IndexError(f"seek to {new} outside [0, {self._num}]")
+        self._cursor = new
+        self._stream.seek(self._stream.cursor
+                          + delta_tokens * self._stream.cfg.host_count)
+
+    # -- plan protocol (host_plan pricing) -----------------------------------
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    @property
+    def num_tokens(self) -> int:
+        return self._num
+
+    @property
+    def token_shape(self) -> tuple[int, ...]:
+        c = self._stream.cfg
+        return (1, c.global_batch, c.seq_len + 1)
+
+    @property
+    def dtype(self):
+        return np.int32
+
+    @property
+    def token_words(self) -> int:
+        c = self._stream.cfg
+        return c.global_batch * (c.seq_len + 1)
+
+
 class Prefetcher:
     """Depth-N background prefetch: the hyperstep's concurrent token fetch.
 
     Depth ≥ 2 means one slow fetch does not stall the step (straggler
     mitigation at the input layer — the paper's double-buffering argument).
+    The training loop itself now overlaps through
+    :class:`repro.core.hyperstep.HyperstepRunner` + :class:`BatchStream`;
+    this class remains for ad-hoc pipelines that want a deeper queue.
     """
 
     def __init__(self, stream: TokenStream, depth: int = 2,

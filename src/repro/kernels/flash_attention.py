@@ -144,9 +144,11 @@ def attention_plan(
                       dtype=dtype, full_shape=(b, hkv, skv, d)),
         ),
         outputs=(
+            # one O block streams up per resident Q block (when (b, h, i)
+            # moves on), the attention analogue of Cannon's finished C tile
             TokenSpec("O", (1, 1, block_q, d),
                       lambda b_, h, i, j: (b_, h, i, 0),
-                      dtype=dtype, full_shape=(b, hq, sq, d)),
+                      dtype=dtype, full_shape=(b, hq, sq, d), direction="up"),
         ),
         scratch=(
             ScratchSpec("m", (block_q, 1), jnp.float32),

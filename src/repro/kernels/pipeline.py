@@ -6,15 +6,23 @@ kernel in ``kernels/`` declares its streaming structure as a
 dimension semantics) and hands it here together with the hyperstep body; the
 mapping is mechanical (DESIGN.md §3):
 
-  ============================  ==========================================
-  StreamPlan                    pl.pallas_call
-  ============================  ==========================================
-  grid (hypersteps)             grid
-  TokenSpec(block, index_map)   pl.BlockSpec(block, index_map)
-  output TokenSpec.full_shape   out_shape=jax.ShapeDtypeStruct(...)
-  ScratchSpec                   pltpu.VMEM scratch ref
-  dimension_semantics           compiler params (via the compat shim)
-  ============================  ==========================================
+  =============================  ==========================================
+  StreamPlan                     pl.pallas_call
+  =============================  ==========================================
+  grid (hypersteps)              grid
+  TokenSpec(block, index_map)    pl.BlockSpec(block, index_map)
+  TokenSpec.direction "down"     in_specs entry (HBM→VMEM prefetch)
+  TokenSpec.direction "up"       out_specs entry (VMEM→HBM write-back)
+  TokenSpec.rate 0 (resident)    constant index map (fetched once)
+  output TokenSpec.full_shape    out_shape=jax.ShapeDtypeStruct(...)
+  ScratchSpec                    pltpu.VMEM scratch ref
+  dimension_semantics            compiler params (via the compat shim)
+  =============================  ==========================================
+
+Mosaic drains a finished output block's VMEM→HBM copy while the next grid
+step computes — the same single-DMA-lane overlap the host-level
+``HyperstepRunner`` gives ``move_up`` write-backs, and the reason Eq. 1's up
+side is charged on the hyperstep where the output block index changes.
 
 Mosaic's automatic grid pipelining then implements the hyperstep schedule:
 the next grid step's HBM→VMEM DMA is issued while the current step computes,

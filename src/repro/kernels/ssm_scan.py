@@ -85,14 +85,17 @@ def ssm_plan(
                       dtype=dtype, full_shape=(bsz, seq, d_state)),
             TokenSpec("C", (1, chunk, d_state), lambda i, j: (i, j, 0),
                       dtype=dtype, full_shape=(bsz, seq, d_state)),
+            # A and D are resident operands: rate 0 (fetched once, hyperstep
+            # 0, single-buffered — no prefetch buffer reserved for them)
             TokenSpec("A", (d_inner, d_state), lambda i, j: (0, 0),
-                      dtype=param_dtype, full_shape=(d_inner, d_state)),
+                      dtype=param_dtype, full_shape=(d_inner, d_state), rate=0),
             TokenSpec("D", (1, d_inner), lambda i, j: (0, 0),
-                      dtype=param_dtype, full_shape=(1, d_inner)),
+                      dtype=param_dtype, full_shape=(1, d_inner), rate=0),
         ),
         outputs=(
+            # each finished y chunk streams up as the cursor moves to the next
             TokenSpec("y", (1, chunk, d_inner), lambda i, j: (i, j, 0),
-                      dtype=dtype, full_shape=(bsz, seq, d_inner)),
+                      dtype=dtype, full_shape=(bsz, seq, d_inner), direction="up"),
         ),
         scratch=(ScratchSpec("h", (d_inner, d_state), jnp.float32),),
         dimension_semantics=("arbitrary", "arbitrary"),

@@ -61,8 +61,10 @@ def dot_plan(n_tok: int, c: int, *, dtype=jnp.float32) -> StreamPlan:
                       full_shape=(n_tok, c)),
         ),
         outputs=(
+            # α is written up exactly once, on the final hyperstep: constant
+            # map + rate 0 (write-once result, no revolving output buffer)
             TokenSpec("alpha", (1, 1), lambda t: (0, 0), dtype=jnp.float32,
-                      full_shape=(1, 1)),
+                      full_shape=(1, 1), direction="up", rate=0),
         ),
         scratch=(ScratchSpec("acc", (1, 1), jnp.float32),),
         dimension_semantics=("arbitrary",),

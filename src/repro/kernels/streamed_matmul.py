@@ -87,8 +87,10 @@ def matmul_plan(
                       dtype=dtype, full_shape=(k, n)),
         ),
         outputs=(
+            # the finished C block streams *up* when (i, j) moves on — one
+            # write-back per output tile, priced by Eq. 1's up side
             TokenSpec("C", (block_m, block_n), lambda i, j, s: (i, j),
-                      dtype=out_dtype, full_shape=(m, n)),
+                      dtype=out_dtype, full_shape=(m, n), direction="up"),
         ),
         scratch=(ScratchSpec("acc", (block_m, block_n), jnp.float32),),
         dimension_semantics=("parallel", "parallel", "arbitrary"),

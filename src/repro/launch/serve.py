@@ -1,54 +1,147 @@
-"""Serving launcher: batched autoregressive decoding with a KV/state cache.
+"""Serving launcher: batched autoregressive decoding as a BSPS program.
 
 ``python -m repro.launch.serve --arch <id> --smoke --batch 4 --steps 32``
 
-Prefill runs once over the prompt (full-sequence forward), then decode steps
-are one hyperstep each: the jitted ``serve_step`` consumes the resident cache
-token (BSPS local state) while the host overlaps sampling of the previous
-step. Greedy or temperature sampling.
+Prefill is one jitted full-sequence pass (a ``lax.scan`` of the decode step
+over the prompt — a single dispatch instead of O(prompt_len) of them), then
+decode runs through :class:`repro.core.hyperstep.HyperstepRunner`: each
+generated token is one hyperstep whose jitted step samples from the resident
+logits and advances the model, the KV/state cache is the persistent local
+state (a :class:`~repro.core.plan.ScratchSpec` in the plan), and the sampled
+token ids are written *up* into a backing :class:`~repro.core.stream.Stream`
+on the runner's DMA lane — the serve path's write-back stream. The run is
+priced by :func:`repro.core.plan.host_plan` and reports its
+``predicted_vs_measured()`` row; prefill and decode timings are reported
+separately.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.core.bsp import BSPAccelerator
+from repro.core.calibrate import calibrate
+from repro.core.hyperstep import HyperstepRecord, HyperstepRunner
+from repro.core.plan import ScratchSpec, host_plan
+from repro.core.stream import StreamSet
 from repro.models import model as M
 from repro.train.steps import make_serve_step
 
 
-def generate(cfg, params, prompt_tokens, *, steps: int, temperature: float = 0.0,
-             seed: int = 0):
+@dataclasses.dataclass
+class ServeStats:
+    """Timings + cost-model row for one :func:`generate` call."""
+
+    prefill_seconds: float
+    decode_seconds: list[float]          # per generated token (compute side)
+    records: list[HyperstepRecord]
+    plan_row: dict[str, float] | None = None
+
+
+def make_prefill(cfg):
+    """One jitted full-sequence prefill: prompt -> (last logits, warm cache).
+
+    Internally a ``lax.scan`` of the decode step over the prompt positions —
+    identical cache contents to the per-token loop, one XLA dispatch, and it
+    works for every mixer type (attention KV, mamba/xlstm recurrent states).
+    """
+    serve_step = make_serve_step(cfg)
+
+    def prefill(params, cache, prompt):          # prompt: (B, S) int32
+        logits, cache = serve_step(params, cache, {"tokens": prompt[:, :1]})
+
+        def body(carry, tok_t):                  # tok_t: (B,) int32
+            cache, _ = carry
+            logits, cache = serve_step(params, cache, {"tokens": tok_t[:, None]})
+            return (cache, logits), None
+
+        (cache, logits), _ = jax.lax.scan(body, (cache, logits),
+                                          prompt[:, 1:].T)
+        return logits, cache
+
+    return jax.jit(prefill, donate_argnums=(1,))
+
+
+def generate(
+    cfg,
+    params,
+    prompt_tokens,
+    *,
+    steps: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+    machine: BSPAccelerator | None = None,
+) -> tuple[jax.Array, ServeStats]:
+    """Generate ``steps`` tokens after ``prompt_tokens``; returns (tokens, stats)."""
     b, s = prompt_tokens.shape
+    if s < 1:
+        raise ValueError("need a non-empty prompt")
     max_len = s + steps
     cache = M.init_cache(cfg, b, max_len)
-    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    cache_bytes = sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(cache) if hasattr(x, "shape"))
 
-    # prefill by stepping the cache through the prompt (teacher forcing)
-    logits = None
-    for t in range(s):
-        logits, cache = serve_step(params, cache, {"tokens": prompt_tokens[:, t:t + 1]})
+    # -- prefill: one dispatch over the whole prompt -------------------------
+    prompt_tokens = prompt_tokens.astype(jnp.int32)
+    t0 = time.perf_counter()
+    logits, cache = make_prefill(cfg)(params, cache, prompt_tokens)
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
 
-    key = jax.random.PRNGKey(seed)
-    out = [prompt_tokens]
-    tok = None
-    times = []
-    for t in range(steps):
+    # -- decode: one hyperstep per generated token ---------------------------
+    serve_step = make_serve_step(cfg)
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def decode_fn(params, logits, cache, key):
+        key, sub = jax.random.split(key)
         if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
         else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out.append(tok.astype(jnp.int32))
-        t0 = time.perf_counter()
-        logits, cache = serve_step(params, cache, {"tokens": tok.astype(jnp.int32)})
-        jax.block_until_ready(logits)
-        times.append(time.perf_counter() - t0)
-    return jnp.concatenate(out, axis=1), times
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+        tok = tok.astype(jnp.int32)[:, None]
+        logits, cache = serve_step(params, cache, {"tokens": tok})
+        return tok, logits, cache, key
+
+    streams = StreamSet()
+    generated = streams.create(np.zeros((steps, b), np.int32), 1, name="generated")
+    plan = host_plan(
+        [], out_streams=[generated],
+        # one forward pass per generated token: ~2 FLOPs/param/sequence
+        flops_per_hyperstep=2.0 * M.count_params(cfg) * b,
+        scratch=(ScratchSpec("cache", (cache_bytes,), jnp.int8),),
+        name=f"serve_{cfg.name}",
+    )
+    machine = machine or calibrate(fast=True)
+
+    def hyperstep(state, _tokens):
+        logits, cache, key = state
+        tok, logits, cache, key = decode_fn(params, logits, cache, key)
+        # the sampled ids stream up; np.asarray on the DMA lane is the
+        # device->external copy, off the compute path
+        return (logits, cache, key), [tok[:, 0]]
+
+    runner = HyperstepRunner(
+        hyperstep, [], out_streams=[generated], plan=plan, machine=machine)
+    runner.run((logits, cache, jax.random.PRNGKey(seed)))
+
+    out = jnp.concatenate(
+        [prompt_tokens, jnp.asarray(generated.data).T.astype(jnp.int32)], axis=1)
+    stats = ServeStats(
+        prefill_seconds=prefill_s,
+        decode_seconds=[r.compute_seconds for r in runner.records],
+        records=runner.records,
+        plan_row=runner.predicted_vs_measured(),
+    )
+    return out, stats
 
 
 def main() -> None:
@@ -65,12 +158,21 @@ def main() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    tokens, times = generate(cfg, params, prompt, steps=args.steps,
+    tokens, stats = generate(cfg, params, prompt, steps=args.steps,
                              temperature=args.temperature)
-    import numpy as np
-    print(f"[serve] arch={args.arch} batch={args.batch} generated={args.steps} "
-          f"tok/step p50={np.median(times) * 1e3:.1f}ms "
-          f"throughput={args.batch / np.median(times):.1f} tok/s")
+    p50 = float(np.median(stats.decode_seconds))
+    print(f"[serve] arch={args.arch} batch={args.batch} "
+          f"prefill={stats.prefill_seconds * 1e3:.1f}ms "
+          f"({args.prompt_len} tokens, 1 dispatch) | "
+          f"decode={args.steps} tok/step p50={p50 * 1e3:.1f}ms "
+          f"throughput={args.batch / p50:.1f} tok/s")
+    row = stats.plan_row or {}
+    if row:
+        print(f"[predicted_vs_measured] pred={row['predicted_seconds']:.4g}s "
+              f"meas={row['measured_seconds']:.4g}s "
+              f"ratio={row['pred_over_meas']:.3g} "
+              f"bw_heavy pred={row['bandwidth_heavy_predicted']:.0f} "
+              f"meas={row['bandwidth_heavy_measured']:.0f}")
     print("sample row:", np.asarray(tokens[0])[: args.prompt_len + 8].tolist())
 
 

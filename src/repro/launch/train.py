@@ -44,9 +44,16 @@ def main() -> None:
                       global_batch=args.batch, seed=args.seed)
     out = train(cfg, tcfg, opt, data_cfg=data)
     final = out["history"][-1]
+    row = out["plan_row"] or {}
     print(f"[done] arch={args.arch} steps={args.steps} "
           f"final_loss={final['loss']:.4f} devices={len(jax.devices())} "
           f"stragglers={len(out['stragglers'])}")
+    if row:
+        print(f"[predicted_vs_measured] pred={row['predicted_seconds']:.4g}s "
+              f"meas={row['measured_seconds']:.4g}s "
+              f"ratio={row['pred_over_meas']:.3g} "
+              f"bw_heavy pred={row['bandwidth_heavy_predicted']:.0f} "
+              f"meas={row['bandwidth_heavy_measured']:.0f}")
 
 
 if __name__ == "__main__":

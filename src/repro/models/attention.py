@@ -17,7 +17,6 @@ token, KV stream, online-softmax state):
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

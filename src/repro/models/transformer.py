@@ -10,7 +10,6 @@ roofline 1–2 period lowerings).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -34,7 +34,10 @@ import jax
 import ml_dtypes  # noqa: F401  (numpy bf16 casts)
 import numpy as np
 
-__all__ = ["save", "restore", "restore_latest", "latest_step", "CheckpointManager"]
+from repro.core.stream import StreamOwnership
+
+__all__ = ["save", "restore", "restore_latest", "latest_step", "snapshot",
+           "CheckpointManager", "CheckpointStream"]
 
 
 def _flat(tree: Any) -> dict[str, np.ndarray]:
@@ -49,6 +52,12 @@ def _flat(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
+def _is_snapshot(v: Any) -> bool:
+    """True for the flat {path: ndarray} dicts produced by :func:`snapshot`."""
+    return (isinstance(v, dict) and v
+            and all(isinstance(a, np.ndarray) for a in v.values()))
+
+
 def _unflat(tree_like: Any, arrays: dict[str, np.ndarray]) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
@@ -61,6 +70,16 @@ def _unflat(tree_like: Any, arrays: dict[str, np.ndarray]) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def snapshot(state: dict[str, Any]) -> dict[str, dict[str, np.ndarray]]:
+    """Copy device state to host numpy (the blocking half of a save).
+
+    Call this *before* the next train step donates the buffers; the flat host
+    dict can then travel down a write-back stream and be flushed to disk off
+    the critical path (:class:`CheckpointStream`).
+    """
+    return {k: _flat(v) for k, v in state.items()}
+
+
 def save(
     directory: str,
     step: int,
@@ -69,10 +88,14 @@ def save(
     data_state: dict[str, Any] | None = None,
     blocking: bool = False,
 ) -> threading.Thread | None:
-    """Write checkpoint ``step`` under ``directory`` (atomically committed)."""
+    """Write checkpoint ``step`` under ``directory`` (atomically committed).
+
+    ``state`` may be device pytrees or an already-host :func:`snapshot` (the
+    flat dict passes through ``np.asarray`` unchanged).
+    """
     os.makedirs(directory, exist_ok=True)
     # snapshot to host — after this, training may mutate device buffers freely
-    host = {k: _flat(v) for k, v in state.items()}
+    host = {k: v if _is_snapshot(v) else _flat(v) for k, v in state.items()}
 
     def _write() -> None:
         tmp = os.path.join(directory, f"step_{step:08d}.tmp")
@@ -103,6 +126,20 @@ def save(
     t = threading.Thread(target=_write, daemon=False, name="ckpt-writer")
     t.start()
     return t
+
+
+def _retention_gc(directory: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` committed checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    )
+    for s in steps[:-keep] if len(steps) > keep else []:
+        import shutil
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
 
 
 def latest_step(directory: str) -> int | None:
@@ -180,13 +217,74 @@ class CheckpointManager:
             self._pending = None
 
     def _gc(self) -> None:
-        if not os.path.isdir(self.directory):
-            return
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp")
-        )
-        for s in steps[: -self.keep] if len(steps) > self.keep else []:
-            import shutil
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
-                          ignore_errors=True)
+        _retention_gc(self.directory, self.keep)
+
+
+class CheckpointStream(StreamOwnership):
+    """Checkpoint write-back as a paper-§4 *up*-stream.
+
+    One ``move_up`` per hyperstep: the token is either ``None`` (no snapshot
+    due — 0 words move on the link) or ``(step, host_snapshot, data_state)``
+    from :func:`snapshot`, which this flushes to disk *synchronously on the
+    caller's thread*. Handed to
+    :class:`repro.core.hyperstep.HyperstepRunner` as an out-stream, that
+    caller is the runner's single DMA lane, so the file write overlaps the
+    next hyperstep's compute and is joined at the bulk synchronisation —
+    checkpoint I/O priced and scheduled exactly like any other output token.
+
+    In :func:`repro.core.plan.host_plan`, pass ``out_every=[every]`` so Eq. 1
+    charges the snapshot only on hypersteps whose output block index changes
+    (one flush per checkpoint interval).
+    """
+
+    token_size = 1
+
+    def __init__(self, directory: str, *, every: int, num_tokens: int,
+                 state_words: int, keep: int = 3, name: str = "checkpoint"):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        self.name = name
+        self.stream_id = 0
+        self._num = int(num_tokens)
+        self._words = int(state_words)
+        self._cursor = 0
+        self._owner: int | None = None
+
+    # -- stream protocol (open/close/exclusivity from StreamOwnership) -------
+
+    def _rewind(self) -> None:
+        self._cursor = 0
+
+    def move_up(self, core: int, token: Any) -> int:
+        self._check_owner(core)
+        self._cursor += 1
+        if token is None:
+            return 0
+        step, host_state, data_state = token
+        save(self.directory, step, host_state, data_state=data_state,
+             blocking=True)
+        _retention_gc(self.directory, self.keep)
+        return self._words
+
+    # -- plan protocol (host_plan pricing) -----------------------------------
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    @property
+    def num_tokens(self) -> int:
+        return self._num
+
+    @property
+    def token_shape(self) -> tuple[int, ...]:
+        return (1, self._words)
+
+    @property
+    def dtype(self):
+        return np.float32
+
+    @property
+    def token_words(self) -> int:
+        return self._words

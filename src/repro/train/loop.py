@@ -1,14 +1,25 @@
-"""The training loop: hypersteps + checkpoint/restart + straggler monitor.
+"""The training loop as a BSPS program: hypersteps + checkpoint/restart +
+straggler monitor.
 
-Structure per step (one pod-level hyperstep, DESIGN.md level 2):
+Training runs through :class:`repro.core.hyperstep.HyperstepRunner` — the same
+executor (and the same Eq. 1 pricing) as every other stream program in the
+repo (DESIGN.md level 2):
 
-  [compute]   jitted train_step on batch t (donated params/opt state)
-  [overlap]   prefetcher stages batch t+1 (depth ≥ 2)
-  [overlap]   CheckpointManager writes snapshot asynchronously
-  [sync]      blocking on metrics = the bulk synchronisation
+  down stream   :class:`repro.data.pipeline.BatchStream` — one training batch
+                per token, staged by the runner's DMA lane while the current
+                jitted train step computes
+  up stream     :class:`repro.train.checkpoint.CheckpointStream` — every
+                ``ckpt_every``-th hyperstep's token is a host snapshot, flushed
+                to disk on the DMA lane overlapped with the next step's compute
+  bulk sync     blocking on the new (params, opt_state) before advancing
+
+The run is priced by :func:`repro.core.plan.host_plan` (the checkpoint stream's
+``t // every`` index map charges one snapshot per interval, Eq. 1's up side)
+and the launcher prints the runner's ``predicted_vs_measured()`` row.
 
 Fault tolerance: auto-resume from the latest valid checkpoint (params, opt
-state, *and* the data-stream cursor — restart is a stream ``seek``); straggler
+state, *and* the data-stream cursor — restart is a stream ``seek``, computed
+at the hyperstep boundary so prefetch lookahead can't skew it); straggler
 monitor flags steps whose wall time is a >3σ outlier of the EWMA (on real
 fleets this feeds preemption/repair; here it logs and records).
 """
@@ -16,14 +27,17 @@ fleets this feeds preemption/repair; here it logs and records).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
+from repro.core.bsp import BSPAccelerator
+from repro.core.calibrate import calibrate
+from repro.core.hyperstep import HyperstepRunner
+from repro.core.plan import host_plan
+from repro.data.pipeline import BatchStream, DataConfig, TokenStream
 from repro.models import model as M
 from repro.optim.adamw import AdamW
 from repro.train import checkpoint as ckpt
@@ -71,6 +85,11 @@ class StragglerMonitor:
         return is_straggler
 
 
+def _state_words(params: Any, opt_state: Any) -> int:
+    return sum(int(np.prod(x.shape)) if getattr(x, "shape", ()) else 1
+               for x in jax.tree_util.tree_leaves((params, opt_state)))
+
+
 def train(
     cfg: ModelConfig,
     tcfg: TrainConfig,
@@ -79,9 +98,15 @@ def train(
     batch_putter: Callable[[dict], dict] | None = None,
     data_cfg: DataConfig | None = None,
     jit_kwargs: dict[str, Any] | None = None,
+    machine: BSPAccelerator | None = None,
     log: Callable[[str], None] = print,
 ) -> dict[str, Any]:
-    """Run (or resume) a training job; returns final state + history."""
+    """Run (or resume) a training job; returns final state + history.
+
+    ``machine`` is the :class:`BSPAccelerator` the run is priced on (default:
+    a fast host calibration) — the returned ``plan_row`` is the runner's
+    predicted-vs-measured table row.
+    """
     data_cfg = data_cfg or DataConfig(
         vocab_size=cfg.vocab_size, seq_len=512, global_batch=8, seed=tcfg.seed)
     stream = TokenStream(data_cfg)
@@ -101,43 +126,78 @@ def train(
 
     step_fn = jax.jit(make_train_step(cfg, opt, aux_weight=tcfg.aux_weight),
                       donate_argnums=(0, 1), **(jit_kwargs or {}))
-    manager = (ckpt.CheckpointManager(tcfg.ckpt_dir, every=tcfg.ckpt_every)
-               if tcfg.ckpt_dir else None)
-    prefetch = Prefetcher(stream, depth=2, put_fn=batch_putter)
     monitor = StragglerMonitor()
     history: list[dict[str, float]] = []
+    steps_left = tcfg.steps - start_step
+    plan_row: dict[str, float] | None = None
 
-    try:
-        for step in range(start_step, tcfg.steps):
-            t0 = time.perf_counter()
-            batch = prefetch.get()
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+    if steps_left > 0:
+        batches = BatchStream(stream, steps_left, put_fn=batch_putter)
+        out_streams: list[Any] = []
+        out_every: list[int] = []
+        if tcfg.ckpt_dir:
+            out_streams = [ckpt.CheckpointStream(
+                tcfg.ckpt_dir, every=tcfg.ckpt_every, num_tokens=steps_left,
+                state_words=_state_words(params, opt_state))]
+            out_every = [tcfg.ckpt_every]
+
+        # fwd + bwd ≈ 6 FLOPs per parameter per processed token
+        hyperstep_flops = (6.0 * M.count_params(cfg)
+                           * data_cfg.global_batch * data_cfg.seq_len)
+        plan = host_plan(
+            [batches], out_streams=out_streams, out_every=out_every,
+            flops_per_hyperstep=hyperstep_flops,
+            name=f"train_{cfg.name}",
+        )
+        machine = machine or calibrate(fast=True)
+
+        def hyperstep(state, tokens):
+            params, opt_state = state
+            params, opt_state, metrics = step_fn(params, opt_state, tokens[0])
             metrics = jax.tree_util.tree_map(float, jax.device_get(metrics))
-            dt = time.perf_counter() - t0
-            metrics["step_seconds"] = dt
-            if monitor.observe(step, dt):
-                log(f"[straggler] step {step}: {dt:.3f}s "
-                    f"(mean {monitor.mean:.3f}s)")
+            step_idx = start_step + len(history)
             history.append(metrics)
-            if manager:
-                manager.maybe_save(
-                    step + 1,
-                    {"params": params, "opt_state": opt_state},
-                    data_state=stream.state_dict(),
-                )
-            if step % tcfg.log_every == 0:
-                log(f"[train] step {step} loss {metrics['loss']:.4f} "
-                    f"gnorm {metrics['grad_norm']:.3f} {dt * 1e3:.0f}ms")
-    finally:
-        prefetch.close()
-        if manager:
-            manager.wait()
+            if step_idx % tcfg.log_every == 0:
+                log(f"[train] step {step_idx} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f}")
+            tok = None
+            if out_streams and (step_idx + 1) % tcfg.ckpt_every == 0:
+                # host snapshot *now*, before the next hyperstep donates the
+                # buffers; the DMA lane flushes it to disk during that compute
+                tok = (step_idx + 1,
+                       ckpt.snapshot({"params": params, "opt_state": opt_state}),
+                       stream.state_at(step_idx + 1))
+            state = (params, opt_state)
+            return (state, [tok]) if out_streams else state
 
-    if manager:
+        def on_end(h: int, _streams) -> None:
+            if not runner.records:  # the h=0 call precedes the first hyperstep
+                return
+            rec = runner.records[-1]
+            step_idx = start_step + rec.index
+            history[-1]["step_seconds"] = rec.step_seconds
+            if monitor.observe(step_idx, rec.step_seconds):
+                log(f"[straggler] step {step_idx}: {rec.step_seconds:.3f}s "
+                    f"(mean {monitor.mean:.3f}s)")
+
+        runner = HyperstepRunner(
+            hyperstep, [batches], out_streams=out_streams,
+            on_hyperstep_end=on_end, plan=plan, machine=machine,
+        )
+        params, opt_state = runner.run((params, opt_state))
+        if runner.records:  # on_end never fires after the terminal hyperstep
+            rec = runner.records[-1]
+            history[-1]["step_seconds"] = rec.step_seconds
+            monitor.observe(start_step + rec.index, rec.step_seconds)
+        plan_row = runner.predicted_vs_measured()
+        log("[plan] " + " ".join(f"{k}={v:.4g}" for k, v in plan_row.items()))
+
+    if tcfg.ckpt_dir:
         ckpt.save(tcfg.ckpt_dir, tcfg.steps,
                   {"params": params, "opt_state": opt_state},
-                  data_state=stream.state_dict(), blocking=True)
+                  data_state=stream.state_at(tcfg.steps), blocking=True)
     return {
         "params": params, "opt_state": opt_state,
         "history": history, "stragglers": monitor.events,
+        "plan_row": plan_row,
     }

@@ -1,7 +1,6 @@
 """Core BSPS model: streams, hypersteps, cost functions, HLO accounting."""
 
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,6 @@ from repro.core import (
     TPU_V5E_CHIP,
     HyperstepCost,
     HyperstepRunner,
-    Stream,
     StreamSet,
     SuperstepCost,
     bsp_cost,
@@ -22,7 +20,6 @@ from repro.core import (
     cannon_k_equal,
     inner_product_cost,
 )
-from repro.core.bsp import BSPAccelerator
 from repro.core.hlo import collective_bytes, parse_shape_bytes
 from repro.core.stream import StreamBusyError, StreamClosedError
 
@@ -185,7 +182,7 @@ def test_collective_bytes_on_real_hlo():
     if len(devs) < 1:
         pytest.skip("no devices")
     mesh = jax.make_mesh((1,), ("x",))
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
 

@@ -9,7 +9,6 @@ directly.
 
 import pathlib
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -263,7 +262,8 @@ def test_lowered_plan_matches_jnp():
         inputs=(TokenSpec("x", (1, 128), lambda t: (t, 0),
                           dtype=jnp.float32, full_shape=(4, 128)),),
         outputs=(TokenSpec("o", (1, 128), lambda t: (0, 0),
-                           dtype=jnp.float32, full_shape=(1, 128)),),
+                           dtype=jnp.float32, full_shape=(1, 128),
+                           direction="up", rate=0),),
         scratch=(ScratchSpec("acc", (1, 128), jnp.float32),),
         dimension_semantics=("arbitrary",),
         flops_per_hyperstep=128.0,

@@ -6,9 +6,6 @@ regimes on *this* host (the paper's §6 validation methodology), and the
 train/serve drivers run end to end.
 """
 
-import dataclasses
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -96,7 +93,6 @@ def test_train_then_serve_roundtrip(tmp_path):
     from repro.configs import get_config
     from repro.data.pipeline import DataConfig
     from repro.launch.serve import generate
-    from repro.models import model as M
     from repro.optim.adamw import AdamW
     from repro.optim.schedule import constant
     from repro.train import checkpoint as ck

@@ -11,7 +11,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
-from repro.optim.adamw import AdamW, global_norm
+from repro.optim.adamw import AdamW
 from repro.optim.compress import TopKCompressor, bf16_grads
 from repro.optim.schedule import constant, linear_warmup_cosine, wsd
 from repro.train import checkpoint as ck

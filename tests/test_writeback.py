@@ -1,0 +1,380 @@
+"""Write-back streams and rate-aware hypersteps (paper §4 ``move_up`` + Eq. 1).
+
+The paper's streams are bidirectional and Eq. 1 sums C_i over *all* opened
+streams, up and down. These tests pin:
+
+* ``Stream.move_up`` semantics on numpy vs jax backings, cursor rewind on
+  ``close()``, exclusivity, seek bounds;
+* the plan layer pricing up-stream traffic (enumerated schedule charges
+  ``e·C_i`` on hypersteps whose output block index changes; closed form
+  charges every up-token) — including an output-heavy plan classified
+  bandwidth-heavy at both the plan and the runner level;
+* the runner's write-back lane, rate-0 resident operands, and rate-k streams;
+* the serve path's single-dispatch prefill matching the per-token loop.
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as planlib
+from repro.core.bsp import BSPAccelerator
+from repro.core.hyperstep import HyperstepRunner
+from repro.core.plan import ScratchSpec, StreamPlan, TokenSpec
+from repro.core.stream import Stream, StreamBusyError, StreamSet
+from repro.kernels.streamed_matmul import matmul_plan
+
+ACC = BSPAccelerator(p=1, g=0.0, l=0.0, r=1e9, e=4.0,
+                     L=1 << 20, E=1 << 30, word_bytes=4, name="test-acc")
+
+
+# ---------------------------------------------------------- move_up basics ----
+
+
+def test_move_up_numpy_backing_is_in_place():
+    ss = StreamSet()
+    backing = np.zeros(8, np.float32)
+    s = ss.create(backing, 4)
+    s.open(0)
+    words = s.move_up(0, np.arange(4, dtype=np.float32))
+    assert words == 4
+    # numpy backings mutate in place: the caller's array sees the write
+    assert s.data is backing
+    np.testing.assert_array_equal(backing[:4], [0, 1, 2, 3])
+    assert s.cursor == 1
+
+
+def test_move_up_jax_backing_rebinds_data():
+    ss = StreamSet()
+    backing = jnp.zeros(8, jnp.float32)
+    s = ss.create(backing, 4)
+    s.open(0)
+    s.move_up(0, jnp.arange(4, dtype=jnp.float32))
+    # jax arrays are immutable: the stream rebinds a functionally-updated copy
+    assert s.data is not backing
+    np.testing.assert_array_equal(np.asarray(s.data[:4]), [0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(backing), np.zeros(8))
+
+
+def test_move_up_none_token_is_free_cursor_advance():
+    ss = StreamSet()
+    s = ss.create(np.ones(8, np.float32), 4)
+    s.open(0)
+    assert s.move_up(0, None) == 0
+    assert s.cursor == 1
+    np.testing.assert_array_equal(np.asarray(s.data), np.ones(8))
+
+
+def test_move_up_bounds_and_close_rewinds_cursor():
+    ss = StreamSet()
+    s = ss.create(np.zeros(8, np.float32), 4)
+    s.open(0)
+    s.move_up(0, np.ones(4, np.float32))
+    s.move_up(0, np.ones(4, np.float32))
+    with pytest.raises(IndexError):
+        s.move_up(0, np.ones(4, np.float32))   # past the last token
+    s.close(0)
+    assert s.cursor == 0                        # close() rewinds (paper §4)
+    s.open(1)                                   # and any core may reopen
+    s.close(1)
+
+
+def test_double_open_and_seek_bounds():
+    ss = StreamSet()
+    s = ss.create(np.zeros(12, np.float32), 4)
+    s.open(0)
+    with pytest.raises(StreamBusyError):
+        s.open(1)
+    s.open(0)                                   # idempotent for the owner
+    with pytest.raises(IndexError):
+        s.seek(0, 4)                            # beyond num_tokens
+    with pytest.raises(IndexError):
+        s.seek(0, -1)                           # before the start
+    s.seek(0, 3)                                # == num_tokens (exhausted) ok
+    s.close(0)
+
+
+# ------------------------------------------------------- Eq. 1, up traffic ----
+
+
+def test_writeback_schedule_charges_on_block_change():
+    # matmul grid (i, j, s): C's (i, j) map ignores s — the finished block
+    # flushes when the plan moves to the next (i, j), so total up-traffic is
+    # exactly one C matrix, charged at the block boundaries.
+    plan = matmul_plan(256, 256, 256, block_m=128, block_n=128, block_k=128,
+                      dtype=jnp.float32)
+    wb = plan.writeback_schedule()
+    tok = 128 * 128
+    assert len(wb) == plan.num_hypersteps == 8
+    # grid order (i, j, s): flush when s wraps back to 0 for a new (i, j)
+    assert wb == [0, 0, tok, 0, tok, 0, tok, tok]
+    assert plan.total_writeback_words() == 256 * 256
+
+
+def test_output_heavy_plan_is_bandwidth_heavy_by_eq1():
+    """Acceptance: up-stream traffic alone can flip a plan bandwidth-heavy."""
+    h, c = 8, 1024
+
+    def build(out_words):
+        return StreamPlan(
+            name="writer",
+            grid=(h,),
+            inputs=(TokenSpec("x", (1, 8), lambda t: (t, 0),
+                              dtype=jnp.float32, full_shape=(h, 8)),),
+            outputs=(TokenSpec("y", (1, out_words), lambda t: (t, 0),
+                               dtype=jnp.float32, full_shape=(h, out_words),
+                               direction="up"),),
+            dimension_semantics=("arbitrary",),
+            flops_per_hyperstep=100.0,
+        )
+
+    light, heavy = build(1), build(c)
+    # identical inputs and compute; only the output token size differs
+    assert not light.bandwidth_heavy(ACC)
+    assert heavy.bandwidth_heavy(ACC)
+    # the exact Eq. 1 sum includes e·C_i for every flushed output block
+    assert heavy.cost(ACC) > light.cost(ACC)
+    assert heavy.cost(ACC) == pytest.approx(
+        sum(max(100.0, ACC.e * (f + w))
+            for f, w in zip([8.0] * (h - 1) + [0.0], heavy.writeback_schedule())))
+
+
+def test_closed_form_charges_every_up_token():
+    plan = matmul_plan(256, 256, 256, block_m=128, block_n=128, block_k=128,
+                      dtype=jnp.float32)
+    tok = 128 * 128
+    assert plan.total_writeback_words(exact=False) == tok * plan.num_hypersteps
+    down = 2 * tok * plan.num_hypersteps
+    flat = BSPAccelerator(p=1, g=0.0, l=0.0, r=1e9, e=1e9,  # link-only regime
+                          L=1 << 20, E=1 << 30)
+    assert plan.cost(flat, exact=False) == pytest.approx(
+        flat.e * (down + tok * plan.num_hypersteps))
+
+
+def test_vmem_single_buffers_resident_tokens():
+    resident = TokenSpec("w", (64, 64), lambda t: (0, 0), dtype=jnp.float32,
+                         rate=0)
+    streamed = TokenSpec("x", (64, 64), lambda t: (t, 0), dtype=jnp.float32)
+    plan = StreamPlan(name="p", grid=(4,), inputs=(streamed, resident),
+                      outputs=(), flops_per_hyperstep=1.0)
+    # rate-0 operands need no prefetch buffer: counted once, not twice
+    assert plan.input_token_bytes == (2 + 1) * 64 * 64 * 4
+
+
+def test_host_plan_prices_sparse_up_stream_once_per_interval():
+    """A checkpoint written every k steps must cost one snapshot per k."""
+    ss = StreamSet()
+    down = ss.create(np.zeros(8 * 4, np.float32), 4)
+    up = ss.create(np.zeros(8 * 256, np.float32), 256, name="ckpt")
+    plan = planlib.host_plan([down], out_streams=[up], out_every=[4],
+                             flops_per_hyperstep=1.0, num_hypersteps=8)
+    wb = plan.writeback_schedule()
+    # block index t//4 changes once mid-run (h=4) + the final flush (h=7)
+    assert wb == [0, 0, 0, 0, 256, 0, 0, 256]
+    assert plan.total_writeback_words() == 2 * 256
+
+
+def test_host_plan_rates_and_scratch():
+    ss = StreamSet()
+    fast = ss.create(np.zeros(16 * 8, np.float32), 8)    # 16 tokens, rate 2
+    resident = ss.create(np.zeros(8, np.float32), 8)     # rate 0
+    plan = planlib.host_plan(
+        [fast, resident], rates=[2, 0], flops_per_hyperstep=1.0,
+        scratch=(ScratchSpec("kv", (128,), jnp.float32),))
+    assert plan.num_hypersteps == 8                       # 16 tokens / rate 2
+    assert plan.inputs[0].block_shape == (16,)            # 2-token block
+    assert plan.inputs[0].rate == 2
+    assert plan.inputs[1].resident
+    sched = plan.fetch_schedule()
+    assert sched[0] == 16 + 8                             # resident charged once
+    assert all(w == 16 for w in sched[1:])
+    assert plan.scratch_bytes == 128 * 4
+
+
+# ------------------------------------------------------------- the runner ----
+
+
+def test_runner_writes_back_through_out_stream():
+    ss = StreamSet()
+    src = ss.create(np.arange(32, dtype=np.float32), 4)
+    out = ss.create(np.zeros(32, np.float32), 4)
+
+    def step(state, toks):
+        y = toks[0] * 2.0
+        return state + float(y.sum()), [y]
+
+    runner = HyperstepRunner(step, [src], out_streams=[out])
+    total = runner.run(0.0)
+    assert total == pytest.approx(2.0 * np.arange(32).sum())
+    np.testing.assert_array_equal(np.asarray(out.data),
+                                  2.0 * np.arange(32, dtype=np.float32))
+    assert all(r.writeback_words == 4 for r in runner.records)
+    # close() rewound both cursors: the program replays identically
+    total2 = runner.run(0.0)
+    assert total2 == pytest.approx(total)
+
+
+def test_runner_serial_and_prefetch_writeback_agree():
+    def step(state, toks):
+        y = toks[0] + 1.0
+        return state, [y]
+
+    outs = []
+    for prefetch in (True, False):
+        ss = StreamSet()
+        src = ss.create(np.arange(16, dtype=np.float32), 4)
+        out = ss.create(np.zeros(16, np.float32), 4)
+        HyperstepRunner(step, [src], out_streams=[out],
+                        prefetch=prefetch).run(None)
+        outs.append(np.asarray(out.data).copy())
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_link_cost_is_max_over_per_core_sums():
+    from repro.core.cost import HyperstepCost
+    acc = dataclasses.replace(ACC, e=1.0)
+    # fetch-heaviest and writeback-heaviest cores differ: Eq. 1 takes the max
+    # of each core's combined down+up volume, not max(fetch) + max(writeback)
+    h = HyperstepCost(bsp_flops=0.0, fetch_words=[10.0, 0.0],
+                      writeback_words=[0.0, 10.0])
+    assert h.link_cost(acc) == pytest.approx(10.0)
+    both = HyperstepCost(bsp_flops=0.0, fetch_words=[10.0, 0.0],
+                         writeback_words=[5.0, 10.0])
+    assert both.link_cost(acc) == pytest.approx(15.0)
+
+
+def test_runner_rate_k_with_pytree_tokens():
+    """rate-k streams whose tokens are dicts (BatchStream) concat leaf-wise."""
+    from repro.data.pipeline import BatchStream, DataConfig, TokenStream
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2, seed=0)
+    batches = BatchStream(TokenStream(cfg), 4)
+    seen = []
+    runner = HyperstepRunner(
+        lambda st, toks: seen.append(toks[0]["tokens"].shape) or st,
+        [batches], rates=[2])
+    runner.run(None)
+    # 4 batch tokens at rate 2 -> 2 hypersteps of a doubled batch dimension
+    assert seen == [(4, 8), (4, 8)]
+
+
+def test_runner_rate0_resident_and_rate_k():
+    ss = StreamSet()
+    data = ss.create(np.arange(16, dtype=np.float32), 2)  # 8 tokens
+    weights = ss.create(np.full(2, 3.0, np.float32), 2)   # resident operand
+
+    seen = []
+
+    def step(state, toks):
+        seen.append(len(toks[0]))
+        return state + float((toks[0] * toks[1][0]).sum())
+
+    runner = HyperstepRunner(step, [data, weights], rates=[2, 0])
+    out = runner.run(0.0)
+    assert len(runner.records) == 4                       # 8 tokens / rate 2
+    assert seen == [4, 4, 4, 4]                           # 2-token blocks
+    assert out == pytest.approx(3.0 * np.arange(16).sum())
+
+
+class _SlowStream(Stream):
+    """An up-stream whose external link is slow (models a contested writer)."""
+
+    def move_up(self, core, token):
+        time.sleep(0.003)
+        return super().move_up(core, token)
+
+
+def test_output_heavy_run_measures_bandwidth_heavy():
+    """Acceptance: the Eq. 1 classification holds at the runner level too —
+    predicted from the plan's up-traffic, measured from the DMA lane."""
+    h = 12
+    ss = StreamSet()
+    down = ss.create(np.zeros(h, np.float32), 1)
+    out = _SlowStream(data=np.zeros((h, 4096), np.float32), token_size=1,
+                      name="results")
+    # big up-tokens, trivial compute: Eq. 1's link side dominates
+    plan = planlib.host_plan([down], out_streams=[out],
+                             flops_per_hyperstep=2.0)
+    assert plan.bandwidth_heavy(ACC)
+
+    def step(state, toks):
+        return state, [np.full(4096, state, np.float32)]
+
+    runner = HyperstepRunner(step, [down], out_streams=[out],
+                             plan=plan, machine=ACC)
+    runner.run(1.0)
+    row = runner.predicted_vs_measured()
+    assert row["bandwidth_heavy_predicted"] == 1.0
+    assert row["bandwidth_heavy_measured"] == 1.0
+    assert sum(r.writeback_words for r in runner.records) == h * 4096
+
+
+def test_runner_without_down_streams_uses_plan_count():
+    """The serve shape: no down streams, one up stream, cache as state."""
+    ss = StreamSet()
+    out = ss.create(np.zeros((6, 2), np.int32), 1)
+    plan = planlib.host_plan([], out_streams=[out], flops_per_hyperstep=1.0)
+    assert plan.num_hypersteps == 6
+
+    def step(state, toks):
+        assert toks == []
+        return state + 1, [np.full(2, state, np.int32)]
+
+    runner = HyperstepRunner(step, [], out_streams=[out], plan=plan,
+                             machine=ACC)
+    assert runner.run(0) == 6
+    np.testing.assert_array_equal(np.asarray(out.data)[:, 0], np.arange(6))
+
+
+# ----------------------------------------------------------- serve prefill ----
+
+
+def test_prefill_single_pass_matches_token_loop():
+    from repro.configs import get_config
+    from repro.launch.serve import make_prefill
+    from repro.models import model as M
+    from repro.train.steps import make_serve_step
+
+    cfg = dataclasses.replace(get_config("minicpm-2b", smoke=True),
+                              num_layers=2, dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 5
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    serve = jax.jit(make_serve_step(cfg))
+    loop_cache = M.init_cache(cfg, b, s + 3)
+    logits = None
+    for t in range(s):
+        logits, loop_cache = serve(params, loop_cache,
+                                   {"tokens": prompt[:, t:t + 1]})
+
+    scan_cache = M.init_cache(cfg, b, s + 3)
+    logits2, scan_cache = make_prefill(cfg)(params, scan_cache, prompt)
+
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2),
+                               rtol=1e-4, atol=1e-5)
+    for a, c in zip(jax.tree_util.tree_leaves(loop_cache),
+                    jax.tree_util.tree_leaves(scan_cache)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_generate_reports_prefill_and_decode_separately():
+    from repro.configs import get_config
+    from repro.launch.serve import generate
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_config("minicpm-2b", smoke=True),
+                              num_layers=2, dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.zeros((2, 4), jnp.int32)
+    tokens, stats = generate(cfg, params, prompt, steps=5, machine=ACC)
+    assert tokens.shape == (2, 9)
+    assert stats.prefill_seconds > 0
+    assert len(stats.decode_seconds) == 5
+    row = stats.plan_row
+    assert row is not None and row["measured_seconds"] > 0
