@@ -3,7 +3,7 @@
 The paper's §6 experiment: run Cannon's algorithm for a sweep of inner block
 sizes k, show the BSPS cost function predicts (a) the runtime and (b) the
 bandwidth↔compute crossover k_equal. We reproduce the methodology on this
-host, calibrated per ``benchmarks.calibrate``:
+host, calibrated per ``repro.core.calibrate``:
 
 1. **runtime prediction** — per-hyperstep wall time vs the model's
    ``max(2k³/r, 2k²·e/r)``, reported as predicted/measured ratio per k;
@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.calibrate import calibrate
 from repro.core import EPIPHANY_III, HyperstepRunner, StreamSet, cannon_k_equal
+from repro.core.calibrate import calibrate
+from repro.core.cost import cannon_hyperstep
 from repro.core.stream import Stream
 
 
@@ -77,11 +78,12 @@ def run() -> list[tuple[str, float, str]]:
     k_eq_paper = cannon_k_equal(dataclasses.replace(EPIPHANY_III, g=1.0))
     rows.append(("epiphany_k_equal_pred", k_eq_paper, "paper Fig.5: ~8"))
 
-    # (1) runtime prediction, untouched link — model says compute heavy
+    # (1) runtime prediction, untouched link — model says compute heavy.
+    # The per-step price is cannon_hyperstep (Eq. 2's term) on a 1×1 grid;
+    # its supersteps field already charges the calibrated barrier l.
     for k in (64, 128, 256, 512):
         comp, fetch = _measure(k, throttle=1)
-        pred = max(2 * k**3 / acc.r, 2 * k**2 * acc.e / acc.r) \
-            + acc.flops_to_seconds(acc.l)
+        pred = acc.flops_to_seconds(cannon_hyperstep(acc, k, 1).cost(acc))
         measured = comp + fetch  # serial mode: step = compute then fetch
         rows.append((f"cannon_k{k}_pred_over_meas", pred / measured, "Eq.2"))
         rows.append((f"cannon_k{k}_bandwidth_heavy",

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.calibrate import calibrate, measure_fetch_model
+from repro.core.calibrate import calibrate, measure_fetch_model
 from repro.core import HyperstepRunner, StreamSet, host_plan
 
 

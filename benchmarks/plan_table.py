@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.calibrate import calibrate
 from repro.core import plan as planlib
+from repro.core.calibrate import calibrate
+from repro.distributed.cannon import cannon_plan, two_level_cannon
 from repro.kernels.ops import interpret_mode
 from repro.kernels.streamed_dot import dot_plan, streamed_dot
 from repro.kernels.streamed_matmul import matmul_plan, streamed_matmul
@@ -85,4 +86,28 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("dot1M_best_C", best_dot.params["token_size"], "autotune pick"))
     rows.append(("dot1M_bandwidth_heavy",
                  float(best_dot.plan.bandwidth_heavy(acc)), "Eq.1 e>1 criterion"))
+
+    # -- two-level Cannon: autotune the outer block count M (Eq. 2) ----------
+    n_c = 256
+    a2 = rng.standard_normal((n_c, n_c)).astype(np.float32)
+    b2 = rng.standard_normal((n_c, n_c)).astype(np.float32)
+
+    def build_cannon(m_blocks):
+        return cannon_plan(n_c, m_blocks, 1)
+
+    def measure_cannon(m_blocks):
+        two_level_cannon(a2, b2, m_blocks, machine=acc)
+
+    best_c, c_choices = planlib.autotune(
+        build_cannon, [{"m_blocks": m} for m in (1, 2, 4, 8)], acc,
+        measure=measure_cannon, measure_top=2)
+    for c in c_choices:
+        m = c.params["m_blocks"]
+        rows.append((f"cannon{n_c}_M{m}_pred_us",
+                     c.predicted_seconds * 1e6, "Eq.2 StreamPlan"))
+        if c.measured_seconds is not None:
+            rows.append((f"cannon{n_c}_M{m}_meas_us",
+                         c.measured_seconds * 1e6, "measured"))
+    rows.append(("cannon256_best_M", best_c.params["m_blocks"],
+                 "autotune pick (Eq.2)"))
     return rows

@@ -1,76 +1,72 @@
 """Two-level Cannon matrix multiplication as a BSPS program (paper §3.2).
 
-The full Algorithm 2: streams Σ^A (row-major outer blocks, each group looped
-M times via ``seek``) and Σ^B (column-major, looped M times), one outer-block
-product per hyperstep, C blocks streamed back up. The inner "Cannon" is the
-device matmul (MXU on TPU via the Pallas streamed kernel; XLA dot here).
+The full Algorithm 2, executed through the repo's actual runtime instead of a
+hand-rolled overlap loop: ``repro.distributed.cannon.cannon_plan`` prices the
+construction with Eq. 2, ``autotune`` picks the outer block count M under the
+machine's local-memory budget, and ``two_level_cannon`` runs the product
+through a multi-core :class:`~repro.core.hyperstep.HyperstepRunner` — per-core
+pseudo-streams Σ^A/Σ^B (the ``MOVE`` reuse as cursor seeks), the inner Cannon
+(``shard_map`` + ``ppermute`` when a square device grid is available, the
+degenerate local matmul otherwise) as the per-hyperstep BSP program, and C
+blocks written back on the cores' DMA lanes.
 
-Prints the BSPS cost prediction next to the measured time, the paper's §6
+Prints the Eq. 2 prediction next to the measured time, the paper's §6
 validation. Run: PYTHONPATH=src python examples/bsps_cannon.py [n] [M]
 """
 
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.calibrate import calibrate
-from repro.core import StreamSet
-
-
-def bsps_cannon(a: np.ndarray, b: np.ndarray, m_blocks: int):
-    """C = A·B with M×M outer blocks streamed per Algorithm 2."""
-    n = a.shape[0]
-    k = n // m_blocks                      # outer block side
-    ss = StreamSet()
-
-    # Σ^A: blocks of A in row-major order; Σ^B: column-major (paper's layout)
-    a_blocks = np.stack([a[i * k:(i + 1) * k, j * k:(j + 1) * k]
-                         for i in range(m_blocks) for j in range(m_blocks)])
-    b_blocks = np.stack([b[i * k:(i + 1) * k, j * k:(j + 1) * k]
-                         for j in range(m_blocks) for i in range(m_blocks)])
-    sa = ss.create(a_blocks, 1, name="A")
-    sb = ss.create(b_blocks, 1, name="B")
-    sa.open(0), sb.open(0)
-
-    mm = jax.jit(lambda acc, x, y: acc + x @ y)
-    warm = jnp.zeros((k, k), jnp.float32)
-    jax.block_until_ready(mm(warm, warm, warm))  # compile outside the timing
-    c = np.zeros((n, n), np.float32)
-    t0 = time.perf_counter()
-    for i in range(m_blocks):
-        for j in range(m_blocks):
-            acc = jnp.zeros((k, k), jnp.float32)
-            for _ in range(m_blocks):      # M hypersteps per C block
-                ta = jnp.asarray(sa.move_down(0)[0])
-                tb = jnp.asarray(sb.move_down(0)[0])
-                acc = mm(acc, ta, tb)
-            c[i * k:(i + 1) * k, j * k:(j + 1) * k] = np.asarray(acc)  # WRITE
-            sa.seek(0, -m_blocks)          # MOVE(Σ^A, −M): reuse row group i
-        sa.seek(0, m_blocks)               # advance to row group i+1
-        sb.seek(0, -m_blocks * m_blocks)   # MOVE(Σ^B, −M²): rewind for next i
-    elapsed = time.perf_counter() - t0
-    sa.close(0), sb.close(0)
-    return c, elapsed
+from repro.core import plan as planlib
+from repro.core.calibrate import calibrate
+from repro.distributed.cannon import cannon_plan, two_level_cannon
 
 
 def main() -> None:
     n = int(sys.argv[1]) if len(sys.argv) > 1 else 512
-    for m_blocks in ([int(sys.argv[2])] if len(sys.argv) > 2 else [2, 4, 8]):
-        a = np.random.default_rng(0).standard_normal((n, n)).astype(np.float32)
-        b = np.random.default_rng(1).standard_normal((n, n)).astype(np.float32)
-        c, elapsed = bsps_cannon(a, b, m_blocks)
+    acc = calibrate()
+
+    # a square device grid makes the inner level a real shard_map Cannon;
+    # otherwise the 1×1 grid's inner program is the local device matmul
+    n_grid = 2 if len(jax.devices()) >= 4 else 1
+    mesh = (jax.make_mesh((n_grid, n_grid), ("data", "model"))
+            if n_grid > 1 else None)
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+
+    # Eq. 2 selects M before anything runs (the paper's central claim):
+    # larger outer blocks are predicted-cheaper until local memory runs out
+    cands = [{"m_blocks": m} for m in (1, 2, 4, 8, 16)
+             if n % (m * n_grid) == 0 and n // (m * n_grid) >= 8]
+    best, choices = planlib.autotune(
+        lambda m_blocks: cannon_plan(n, m_blocks, n_grid), cands, acc)
+    for c in choices:
+        tag = "ok " if c.feasible else "OOM"
+        print(f"  [autotune] M={c.params['m_blocks']:2d} {tag} "
+              f"predicted={c.predicted_seconds * 1e3:8.2f}ms "
+              f"vmem={c.plan.vmem_bytes / 1e6:.1f}MB")
+    print(f"  [autotune] picked M={best.params['m_blocks']} (Eq. 2)")
+
+    run_ms = ([int(sys.argv[2])] if len(sys.argv) > 2
+              else sorted({best.params["m_blocks"], 2, 4}))
+    for m_blocks in run_ms:
+        if n % (m_blocks * n_grid) != 0:
+            continue
+        c, runner = two_level_cannon(a, b, m_blocks, n_grid=n_grid, mesh=mesh,
+                                     machine=acc)
         err = float(np.abs(c - a @ b).max())
-        acc = calibrate()
-        k = n // m_blocks
-        # Eq. 2 with N=1 (single device = 1 'core'), plus calibrated barrier l
-        per_step = max(2 * k**3, 2 * k**2 * acc.e) + acc.l
-        pred = acc.flops_to_seconds(m_blocks**3 * per_step)
-        print(f"n={n} M={m_blocks} k={k}: err={err:.2e} "
-              f"measured={elapsed * 1e3:.1f}ms predicted={pred * 1e3:.1f}ms "
-              f"(x{pred / elapsed:.2f})")
+        row = runner.predicted_vs_measured()
+        k = n // (m_blocks * n_grid)
+        print(f"n={n} N={n_grid} M={m_blocks} k={k}: err={err:.2e} "
+              f"measured={row['measured_seconds'] * 1e3:.1f}ms "
+              f"predicted={row['predicted_seconds'] * 1e3:.1f}ms "
+              f"(x{row['pred_over_meas']:.2f}) "
+              f"bw_heavy pred={row['bandwidth_heavy_predicted']:.0f} "
+              f"meas={row['bandwidth_heavy_measured']:.0f}")
 
 
 if __name__ == "__main__":

@@ -7,19 +7,21 @@ paper's constant size C_i) streams from external memory; the dense vector x
 is the *resident* data structure in local memory; each hyperstep multiplies
 one row-block token into the output. Arithmetic intensity is ~2 FLOPs per
 streamed word, so the BSPS cost model predicts bandwidth-heavy hypersteps on
-every machine with e > 1 — checked against measured timings below.
+every machine with e > 1 — validated against the runner's own
+``predicted_vs_measured()`` row: the run executes through
+``HyperstepRunner(plan=host_plan(...), machine=...)`` like train/serve do,
+not a hand-rolled loop.
 
 Run: PYTHONPATH=src python examples/bsps_spmv.py [n] [density]
 """
 
 import sys
-import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.calibrate import calibrate
-from repro.core import HyperstepCost, HyperstepRunner, StreamSet
+from repro.core import HyperstepRunner, StreamSet, host_plan
+from repro.core.calibrate import calibrate
 
 
 def make_ell_blocks(n: int, density: float, block_rows: int, seed: int = 0):
@@ -46,15 +48,20 @@ def main() -> None:
     sv = ss.create(vals, 1, name="vals")
     xd = jnp.asarray(x)                          # resident vector (local mem)
 
+    acc = calibrate()
+    plan = host_plan(
+        [sc, sv],
+        # one multiply-add per stored nonzero of the row block
+        flops_per_hyperstep=2.0 * block_rows * nnz,
+        name=f"spmv_n{n}",
+    )
     runner = HyperstepRunner(
-        lambda acc, toks: acc
+        lambda acc_, toks: acc_
         + [np.asarray(jnp.einsum("rj,rj->r", jnp.asarray(toks[1][0]),
                                  xd[jnp.asarray(toks[0][0])]))],
-        [sc, sv], device=None,
+        [sc, sv], device=None, plan=plan, machine=acc,
     )
-    t0 = time.perf_counter()
     parts = runner.run([])
-    elapsed = time.perf_counter() - t0
     y = np.concatenate(parts)
 
     # dense reference
@@ -64,20 +71,21 @@ def main() -> None:
         ref += flat_v[:, j] * x[flat_c[:, j]]
     err = float(np.abs(y - ref).max())
 
-    # BSPS cost: per hyperstep C = 2·block_rows·nnz words, 2·block_rows·nnz flops
-    acc = calibrate()
-    c_words = 2 * block_rows * nnz
-    h = HyperstepCost(bsp_flops=2 * block_rows * nnz, fetch_words=[c_words])
-    regime = "bandwidth" if h.bandwidth_heavy(acc) else "compute"
-    pred = acc.flops_to_seconds(nb * (h.cost(acc) + acc.l))
+    row = runner.predicted_vs_measured()
+    regime = "bandwidth" if row["bandwidth_heavy_predicted"] else "compute"
     print(f"spmv n={n} nnz/row={nnz} blocks={nb}: err={err:.2e} "
-          f"measured={elapsed * 1e3:.1f}ms predicted={pred * 1e3:.1f}ms | "
-          f"model says {regime}-heavy (e={acc.e:.1f})")
+          f"measured={row['measured_seconds'] * 1e3:.1f}ms "
+          f"predicted={row['predicted_seconds'] * 1e3:.1f}ms | "
+          f"model says {regime}-heavy (e={acc.e:.1f}) | "
+          f"fetch words planned={row['fetch_words_planned']:.0f} "
+          f"measured={row['fetch_words_measured']:.0f}")
     comp = np.median([r.compute_seconds for r in runner.records[:-1]])
     fetch = np.median([r.fetch_seconds for r in runner.records[:-1]])
     print(f"measured per-hyperstep: compute {comp * 1e3:.2f}ms "
           f"fetch {fetch * 1e3:.2f}ms -> "
-          f"{'bandwidth' if fetch > comp else 'compute'}-heavy")
+          f"{'bandwidth' if fetch > comp else 'compute'}-heavy "
+          f"(measured vote: "
+          f"{'bandwidth' if row['bandwidth_heavy_measured'] else 'compute'})")
 
 
 if __name__ == "__main__":

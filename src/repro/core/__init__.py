@@ -15,6 +15,7 @@ from repro.core.cost import (
     bsps_cost,
     cannon_bsp_cost,
     cannon_bsps_cost,
+    cannon_hyperstep,
     cannon_k_equal,
     inner_product_cost,
 )
@@ -34,7 +35,8 @@ from repro.core.stream import Stream, StreamSet
 __all__ = [
     "BSPAccelerator", "BSPComputer", "EPIPHANY_III", "TPU_V5E_CHIP", "TPU_V5E_POD",
     "HyperstepCost", "SuperstepCost", "bsp_cost", "bsps_cost",
-    "cannon_bsp_cost", "cannon_bsps_cost", "cannon_k_equal", "inner_product_cost",
+    "cannon_bsp_cost", "cannon_bsps_cost", "cannon_hyperstep", "cannon_k_equal",
+    "inner_product_cost",
     "HyperstepRecord", "HyperstepRunner", "run_bsps",
     "PlanChoice", "ScratchSpec", "StreamPlan", "TokenSpec",
     "autotune", "enumerate_plans", "host_plan",

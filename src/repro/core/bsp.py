@@ -106,6 +106,15 @@ class BSPAccelerator(BSPComputer):
         """Wall time to stream ``words`` from external memory into one core."""
         return self.flops_to_seconds(self.e * words)
 
+    def core_grid_side(self) -> int:
+        """N = √p for square-core-grid algorithms (Cannon, paper §3.2)."""
+        n = int(math.isqrt(self.p))
+        if n * n != self.p:
+            raise ValueError(
+                f"p={self.p} on {self.name} is not a square core grid; "
+                "pass the grid side N explicitly")
+        return n
+
     @property
     def balance(self) -> float:
         """FLOPs a core can execute in the time one external word arrives (= e).

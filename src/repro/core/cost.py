@@ -33,6 +33,7 @@ __all__ = [
     "inner_product_cost",
     "cannon_bsp_cost",
     "cannon_bsps_cost",
+    "cannon_hyperstep",
     "cannon_k_equal",
 ]
 
@@ -62,11 +63,27 @@ class HyperstepCost:
     hyperstep; ``writeback_words[s]`` is the volume of finished output tokens
     it streams up during this hyperstep. Both ride the same external link, so
     the link side of the ``max`` is their sum.
+
+    The hyperstep's compute side is a full *inner BSP program* on the p-core
+    grid, ``Σ_i (max_s w_i(s) + g·h_i + l)``: ``bsp_flops`` is the work term
+    (the sum of per-superstep critical paths), ``comm_words`` the summed
+    h-relations ``Σ_i h_i`` in words, and ``supersteps`` the superstep count
+    (each pays one barrier ``l``). With ``comm_words = supersteps = 0`` the
+    hyperstep degenerates to the single-core pure-compute case. Two-level
+    Cannon (paper Eq. 2) is one hyperstep with ``bsp_flops = N·2k³``,
+    ``comm_words = N·2k²``, ``supersteps = N`` and ``fetch_words = [2k²]·p``.
     """
 
     bsp_flops: float
     fetch_words: Sequence[float]
     writeback_words: Sequence[float] = ()
+    comm_words: float = 0.0
+    supersteps: float = 0.0
+
+    def compute_cost(self, machine: BSPComputer) -> float:
+        """The inner BSP program's cost: Σ_i (max_s w_i(s) + g·h_i + l)."""
+        return (self.bsp_flops + machine.g * self.comm_words
+                + machine.l * self.supersteps)
 
     def fetch_cost(self, acc: BSPAccelerator) -> float:
         return acc.e * max(self.fetch_words, default=0.0)
@@ -89,11 +106,11 @@ class HyperstepCost:
         return acc.e * max(f + w for f, w in zip(fw, ww))
 
     def cost(self, acc: BSPAccelerator) -> float:
-        return max(self.bsp_flops, self.link_cost(acc))
+        return max(self.compute_cost(acc), self.link_cost(acc))
 
     def bandwidth_heavy(self, acc: BSPAccelerator) -> bool:
         """True if moving tokens (either direction) dominates (paper §2)."""
-        return self.link_cost(acc) > self.bsp_flops
+        return self.link_cost(acc) > self.compute_cost(acc)
 
 
 def bsp_cost(supersteps: Sequence[SuperstepCost], machine: BSPComputer) -> float:
@@ -135,21 +152,26 @@ def cannon_bsps_cost(acc: BSPAccelerator, n: int, M: int, N: int | None = None) 
     k = n/(N·M) = inner block side. T̃ = M³ · max( N(2k³ + 2k²g + l), 2k²e ).
     """
     if N is None:
-        N = int(math.isqrt(acc.p))
-        if N * N != acc.p:
-            raise ValueError(f"p={acc.p} is not a square core grid; pass N explicitly")
+        N = acc.core_grid_side()
     if n % (N * M) != 0:
         raise ValueError(f"n={n} must be divisible by N*M={N * M} (paper pads with zeros)")
     k = n // (N * M)
-    compute = N * (2.0 * k**3 + 2.0 * k**2 * acc.g + acc.l)
-    fetch = 2.0 * k**2 * acc.e
-    return M**3 * max(compute, fetch)
+    return M**3 * cannon_hyperstep(acc, k, N).cost(acc)
 
 
 def cannon_hyperstep(acc: BSPAccelerator, k: int, N: int) -> HyperstepCost:
-    """One hyperstep of two-level Cannon: inner Cannon + prefetch of 2 k² tokens."""
+    """One hyperstep of two-level Cannon (the per-step term of Eq. 2).
+
+    The inner BSP program is N supersteps of Cannon on the N×N core grid:
+    work N·2k³, h-relation 2k² per superstep (one k×k block of A and of B
+    shifted per core), one barrier each — ``compute_cost`` is exactly
+    ``N(2k³ + 2k²g + l)``. The link side is the prefetch of the next outer
+    block's two k² tokens per core.
+    """
     return HyperstepCost(
-        bsp_flops=N * (2.0 * k**3 + 2.0 * k**2 * acc.g + acc.l),
+        bsp_flops=N * 2.0 * k**3,
+        comm_words=N * 2.0 * k**2,
+        supersteps=float(N),
         fetch_words=[2.0 * k**2] * acc.p,
     )
 

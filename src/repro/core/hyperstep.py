@@ -10,11 +10,19 @@ outputs of h-1 safely in external memory.
 This module realises that schedule at the host/JAX level:
 
 * "local memory" = device buffers; "external memory" = the stream backing store;
-* the async DMA engine = a background thread (one, like the single DMA engine
-  per Epiphany core) that stages the next tokens *and* drains finished output
-  tokens (``bsp_stream_move_up``) while the current compute callable runs;
-* the bulk synchronisation = joining the DMA lane + blocking on the compute
-  result before advancing.
+* the async DMA engine = a background thread *per core* (one, like the single
+  DMA engine per Epiphany core) that stages the next tokens *and* drains
+  finished output tokens (``bsp_stream_move_up``) while the current compute
+  callable runs;
+* the bulk synchronisation = joining every core's DMA lane + blocking on the
+  compute result before advancing.
+
+The runner is the paper's full two-level construction: with ``cores=p`` each of
+the p cores owns its own stream set and DMA lane, and the per-hyperstep ``step``
+is the *inner BSP program* on the whole grid (e.g. Cannon's systolic rotations
+via ``shard_map`` in ``distributed/cannon.py``), called once per hyperstep with
+every core's tokens. The single-core mode (``cores=None``) is the degenerate
+p=1 case with the original flat-stream interface.
 
 The same schedule appears one level down in ``kernels/`` where Pallas grid
 pipelining overlaps the HBM→VMEM copy of block i+1 (and the VMEM→HBM drain of
@@ -23,18 +31,23 @@ output block i-1) with compute on block i.
 Streams need not all advance at the same rate: ``rates[i]`` tokens of stream i
 are consumed per hyperstep — rate-0 streams are resident operands fetched once
 before hyperstep 0, rate-k streams deliver a k-token block each step (the
-paper's freedom to size C_i per stream).
+paper's freedom to size C_i per stream). Up-streams may flush sparsely:
+``out_every[j]`` says out-stream j completes one token every that many
+hypersteps (two-level Cannon's C block flushes once per M-step outer product).
 
-The executor records per-hyperstep wall times split into compute / fetch /
-write-back — the fetch and write-back durations are measured *inside* the DMA
-lane, so they are real link-busy times even when fully hidden behind compute —
-plus ``fetch_wait_seconds``, the slice of the bulk sync actually spent waiting
-on the lane. That lets the benchmarks validate the BSPS cost model's
-``max(T_h, e·ΣC_i)`` prediction (the paper's Fig. 5 methodology) against
-measured quantities. Give the runner the run's
-:class:`~repro.core.plan.StreamPlan` (see :func:`repro.core.plan.host_plan`)
-and the machine's :class:`~repro.core.bsp.BSPAccelerator` and it prices the
-run with the same Eq. 1 used one level down for the Pallas kernels —
+The executor records per-core, per-hyperstep wall times split into compute /
+fetch / write-back — the fetch and write-back durations are measured *inside*
+each DMA lane, so they are real link-busy times even when fully hidden behind
+compute — plus ``fetch_wait_seconds``, the slice of the bulk sync actually
+spent waiting on the lanes. The pre-loop staging of hyperstep 0's tokens (and
+of the rate-0 residents) is attributed to record 0's ``initial_fetch_*``
+fields, so summed words over the records match the plan's enumerated fetch
+schedule exactly. ``records`` holds the bulk-synchronous aggregate — the max
+over cores, the quantity Eq. 1 prices — and ``core_records[c]`` each core's own
+row. Give the runner the run's :class:`~repro.core.plan.StreamPlan` (see
+:func:`repro.core.plan.host_plan`) and the machine's
+:class:`~repro.core.bsp.BSPAccelerator` and it prices the run with the same
+Eq. 1/Eq. 2 used one level down for the Pallas kernels —
 :meth:`HyperstepRunner.predicted_vs_measured` is the predicted/measured table
 row.
 """
@@ -67,6 +80,13 @@ class HyperstepRecord:
     compute finished — >0 means the link, not the core, gated this step.
     Write-back of step h's outputs overlaps step h+1's compute, so its fields
     are filled in when that later bulk sync joins the lane.
+
+    Record 0 additionally carries ``initial_fetch_words`` /
+    ``initial_fetch_seconds``: the pre-loop staging of hyperstep 0's tokens
+    and the rate-0 residents (the paper assumes them resident at program
+    start, so they are outside ``step_seconds`` — but they did cross the
+    external link, and the plan's enumerated fetch schedule charges them at
+    arrival 0).
     """
 
     index: int
@@ -77,6 +97,8 @@ class HyperstepRecord:
     fetch_wait_seconds: float = 0.0
     writeback_seconds: float = 0.0
     writeback_words: int = 0
+    initial_fetch_seconds: float = 0.0
+    initial_fetch_words: int = 0
 
     @property
     def bandwidth_heavy(self) -> bool:
@@ -128,6 +150,35 @@ def _fetch(
     return toks, time.perf_counter() - t0
 
 
+def _prologue(
+    streams: Sequence[Stream],
+    rates: Sequence[int],
+    core: int,
+    device: Any | None,
+) -> tuple[list[Any], list[Any], int, float]:
+    """Pre-loop staging: rate-0 residents + hyperstep 0's tokens, one core.
+
+    Returns (residents, first_tokens, words, seconds) — the words and the
+    in-thread duration cover *everything* this core moved before hyperstep 0,
+    matching the plan's arrival-0 charge.
+    """
+    t0 = time.perf_counter()
+    residents: list[Any] = []
+    words = 0
+    for s, r in zip(streams, rates):
+        if r != 0:
+            residents.append(None)
+            continue
+        tok = s.move_down(core)
+        if device is not None:
+            tok = jax.device_put(tok, device)
+        residents.append(_block(tok))
+        words += s.token_words
+    toks, _ = _fetch(streams, rates, core, device)
+    words += sum(s.token_words * r for s, r in zip(streams, rates))
+    return residents, toks, words, time.perf_counter() - t0
+
+
 def _writeback(
     out_streams: Sequence[Stream], core: int, out_tokens: Sequence[Any]
 ) -> tuple[int, float]:
@@ -150,78 +201,143 @@ class HyperstepRunner:
     Parameters
     ----------
     step:
-        The hyperstep's BSP program. Called with the resident tokens (one per
-        advancing stream, in stream order, resident rate-0 tokens included at
-        their stream position); should be jitted for realistic overlap. With
-        ``out_streams`` given, must return ``(state, out_tokens)`` — one token
-        per out stream (``None`` skips that stream's write for this hyperstep,
-        advancing its cursor for free).
+        The hyperstep's BSP program. Single-core: called with the resident
+        tokens (one per advancing stream, in stream order, resident rate-0
+        tokens included at their stream position). Multi-core (``cores=p``):
+        called once per hyperstep with ``tokens[i]`` = the list of core 0..p-1
+        tokens of stream slot i — the step *is* the inner BSP program on the
+        whole grid, so it sees every core's tokens and runs between two bulk
+        syncs. Should be jitted (at least internally) for realistic overlap.
+        With ``out_streams`` given, must return ``(state, out_tokens)`` — one
+        token per out slot (per core, in multi-core mode); ``None`` skips
+        that stream's write for the hyperstep, advancing its cursor for free.
     streams:
-        The open down-streams of this core (``O_s``). ``rates[i]`` tokens of
-        stream i are consumed per hyperstep (default 1 each); rate 0 marks a
-        resident operand — fetched once before hyperstep 0, never advanced.
-        Use :meth:`Stream.seek` inside ``on_hyperstep_end`` for the
+        The open down-streams (``O_s``). Single-core: a flat sequence.
+        Multi-core: a length-p sequence of per-core sequences — every core
+        must open the same number of slots, slot i sharing one ``rates[i]``
+        (the paper's homogeneous grid; ``StreamSet.create_cyclic`` /
+        ``create_block_grid`` produce exactly this layout). Use
+        :meth:`Stream.seek` inside ``on_hyperstep_end`` for the
         pseudo-streaming access patterns (e.g. Cannon's ``MOVE`` calls).
+    cores:
+        None (default) = classic single-core mode on core id ``core``.
+        An int p = multi-core mode on core ids 0..p-1: per-core stream sets,
+        one DMA lane per core, a shared bulk-sync barrier, per-core records.
+    rates:
+        Per-slot cursor advance per hyperstep (default 1 each); rate 0 marks
+        a resident operand — fetched once before hyperstep 0, never advanced.
     out_streams:
-        Up-streams written back each hyperstep (``bsp_stream_move_up``). The
-        write-back of hyperstep h rides the same single DMA lane as the
-        prefetch, overlapped with hyperstep h+1's compute and joined at its
-        bulk sync. Out tokens are consumed on the lane concurrently with that
-        compute — a step that donates its inputs must hand over tokens that do
-        not alias them (e.g. a host snapshot).
+        Up-streams written back (``bsp_stream_move_up``), nested per core in
+        multi-core mode. The write-back of hyperstep h rides the same
+        per-core DMA lane as the prefetch, overlapped with hyperstep h+1's
+        compute and joined at its bulk sync. Out tokens are consumed on the
+        lane concurrently with that compute — a step that donates its inputs
+        must hand over tokens that do not alias them (e.g. a host snapshot).
+    out_every:
+        Per-out-slot flush interval (default 1 = every hyperstep): slot j is
+        written (and its cursor advanced) only on hypersteps h with
+        ``(h+1) % out_every[j] == 0`` — two-level Cannon's C block completes
+        once per M-hyperstep outer product. Mirrors ``host_plan(out_every=)``.
     prefetch:
         If True (default) overlap next-token fetch / write-back with compute —
         the defining feature of a hyperstep. If False, run serially (reference
         semantics; used by tests to check overlap changes timing only).
     plan / machine:
         Optional :class:`StreamPlan` describing this run (see
-        :func:`repro.core.plan.host_plan`) and the
-        :class:`BSPAccelerator` to price it on. When both are given the
-        runner predicts its own wall time with Eq. 1 before running — the
-        plan also supplies the default hyperstep count.
+        :func:`repro.core.plan.host_plan`; for a multi-core run the plan
+        describes one core's streams plus the inner program's
+        ``comm_words/supersteps`` terms) and the :class:`BSPAccelerator` to
+        price it on. When both are given the runner predicts its own wall
+        time with Eq. 1 before running — the plan also supplies the default
+        hyperstep count.
     """
 
     def __init__(
         self,
         step: Callable[..., Any],
-        streams: Sequence[Stream],
+        streams: Sequence[Any],
         *,
         core: int = 0,
+        cores: int | None = None,
         rates: Sequence[int] | None = None,
-        out_streams: Sequence[Stream] = (),
+        out_streams: Sequence[Any] = (),
+        out_every: Sequence[int] | None = None,
         prefetch: bool = True,
         device: Any | None = None,
-        on_hyperstep_end: Callable[[int, Sequence[Stream]], None] | None = None,
+        on_hyperstep_end: Callable[[int, Sequence[Any]], None] | None = None,
         plan: StreamPlan | None = None,
         machine: BSPAccelerator | None = None,
     ) -> None:
         self._step = step
-        self._streams = list(streams)
-        self._rates = list(rates) if rates is not None else [1] * len(self._streams)
-        if len(self._rates) != len(self._streams):
+        self._multi = cores is not None
+        if self._multi:
+            if cores <= 0:
+                raise ValueError(f"cores must be positive, got {cores}")
+            self._core_ids = list(range(cores))
+            self._streams = [list(s) for s in streams]
+            if len(self._streams) != cores:
+                raise ValueError(
+                    f"multi-core mode needs one stream set per core: got "
+                    f"{len(self._streams)} sets for {cores} cores")
+            self._out_streams = ([list(o) for o in out_streams]
+                                 if out_streams else [[] for _ in self._core_ids])
+            if len(self._out_streams) != cores:
+                raise ValueError(
+                    f"multi-core mode needs one out-stream set per core: got "
+                    f"{len(self._out_streams)} sets for {cores} cores")
+        else:
+            self._core_ids = [core]
+            self._streams = [list(streams)]
+            self._out_streams = [list(out_streams)]
+        n_slots = len(self._streams[0])
+        n_out = len(self._out_streams[0])
+        for ss in self._streams:
+            if len(ss) != n_slots:
+                raise ValueError("every core must open the same stream slots")
+        for ss in self._out_streams:
+            if len(ss) != n_out:
+                raise ValueError("every core must open the same out-stream slots")
+
+        self._rates = list(rates) if rates is not None else [1] * n_slots
+        if len(self._rates) != n_slots:
             raise ValueError(
-                f"rates has {len(self._rates)} entries for "
-                f"{len(self._streams)} streams")
+                f"rates has {len(self._rates)} entries for {n_slots} streams")
         if any(r < 0 for r in self._rates):
             raise ValueError(f"rates must be >= 0, got {self._rates}")
-        self._out_streams = list(out_streams)
-        self._core = core
+        self._out_every = (list(out_every) if out_every is not None
+                           else [1] * n_out)
+        if len(self._out_every) != n_out:
+            raise ValueError(
+                f"out_every has {len(self._out_every)} entries for "
+                f"{n_out} out streams")
+        if any(e < 1 for e in self._out_every):
+            raise ValueError(f"out_every must be >= 1, got {self._out_every}")
         self._prefetch = prefetch
         self._device = device
         self._on_end = on_hyperstep_end
         self.plan = plan
         self.machine = machine
         self.records: list[HyperstepRecord] = []
+        self.core_records: list[list[HyperstepRecord]] = [
+            [] for _ in self._core_ids]
 
     # -- schedule helpers ----------------------------------------------------
 
+    @property
+    def num_cores(self) -> int:
+        return len(self._core_ids)
+
     def _remaining(self) -> int | None:
         """Hypersteps the streams can still supply (None if nothing advances)."""
-        budgets = [
-            (s.num_tokens - s.cursor) // r
-            for s, r in zip(self._streams, self._rates) if r > 0
-        ]
-        budgets += [s.num_tokens - s.cursor for s in self._out_streams]
+        budgets = []
+        for ss in self._streams:
+            budgets += [
+                (s.num_tokens - s.cursor) // r
+                for s, r in zip(ss, self._rates) if r > 0
+            ]
+        for outs in self._out_streams:
+            budgets += [(s.num_tokens - s.cursor) * e
+                        for s, e in zip(outs, self._out_every)]
         return min(budgets) if budgets else None
 
     def _resolve_total(self, num_hypersteps: int | None) -> int:
@@ -244,6 +360,39 @@ class HyperstepRunner:
             toks.append(resident[idx] if rate == 0 else next(it))
         return toks
 
+    def _step_tokens(self, per_core: list[list[Any]]) -> list[Any]:
+        """Per-core token lists -> the step's argument.
+
+        Single-core: the flat token list. Multi-core: one entry per stream
+        slot, each the list of per-core tokens (core order 0..p-1).
+        """
+        if not self._multi:
+            return per_core[0]
+        n_slots = len(self._streams[0])
+        return [[per_core[c][i] for c in range(self.num_cores)]
+                for i in range(n_slots)]
+
+    def _per_core_out(self, out_tokens: Sequence[Any]) -> list[list[Any]]:
+        """The step's out tokens -> per-core lists (one entry per out slot).
+
+        A slot-level ``None`` (the documented skip) expands to a ``None`` for
+        every core, so multi-core steps can skip a write as tersely as
+        single-core ones.
+        """
+        n_out = len(self._out_streams[0])
+        if len(out_tokens) != n_out:
+            raise ValueError(
+                f"step returned {len(out_tokens)} out tokens for "
+                f"{n_out} out streams")
+        if not self._multi:
+            return [list(out_tokens)]
+        return [[None if out_tokens[j] is None else out_tokens[j][c]
+                 for j in range(n_out)]
+                for c in range(self.num_cores)]
+
+    def _on_end_arg(self) -> Any:
+        return self._streams if self._multi else self._streams[0]
+
     def run(self, state: Any, num_hypersteps: int | None = None) -> Any:
         """Execute hypersteps until streams are exhausted (or a fixed count).
 
@@ -251,24 +400,34 @@ class HyperstepRunner:
         cursors, so each call replays the program from the start (records
         accumulate across calls).
         """
-        # One background lane, like the single DMA engine per Epiphany core;
-        # per-run so the runner can be reused after the lane shuts down.
-        self._dma = ThreadPoolExecutor(max_workers=1, thread_name_prefix="bsps-dma")
-        for s in [*self._streams, *self._out_streams]:
-            s.open(self._core)
-        wb_fut: Future | None = None
+        ncores = self.num_cores
+        # One background lane per core, like the single DMA engine per
+        # Epiphany core; per-run so the runner can be reused afterwards.
+        self._dma = [
+            ThreadPoolExecutor(max_workers=1, thread_name_prefix=f"bsps-dma{c}")
+            for c in self._core_ids
+        ]
+        for core, ins, outs in zip(self._core_ids, self._streams,
+                                   self._out_streams):
+            for s in [*ins, *outs]:
+                s.open(core)
+        wb_futs: list[Future | None] = [None] * ncores
         wb_idx = -1
 
         def join_writeback() -> None:
-            nonlocal wb_fut
-            if wb_fut is None:
+            nonlocal wb_futs
+            if all(f is None for f in wb_futs):
                 return
-            words, seconds = wb_fut.result()
+            per = [(0, 0.0) if f is None else f.result() for f in wb_futs]
             if 0 <= wb_idx < len(self.records):
-                rec = self.records[wb_idx]
-                rec.writeback_seconds = seconds
-                rec.writeback_words = words
-            wb_fut = None
+                for c, (words, seconds) in enumerate(per):
+                    rec = self.core_records[c][wb_idx]
+                    rec.writeback_seconds = seconds
+                    rec.writeback_words = words
+                agg = self.records[wb_idx]
+                agg.writeback_seconds = max(s for _, s in per)
+                agg.writeback_words = max(w for w, _ in per)
+            wb_futs = [None] * ncores
 
         try:
             total = self._resolve_total(num_hypersteps)
@@ -277,40 +436,50 @@ class HyperstepRunner:
 
             # Hyperstep 0's tokens are assumed resident at program start
             # (paper §2); rate-0 operands are fetched here, once, and reused.
-            residents: list[Any] = []
-            for s, r in zip(self._streams, self._rates):
-                if r != 0:
-                    residents.append(None)
-                    continue
-                tok = s.move_down(self._core)
-                if self._device is not None:
-                    tok = jax.device_put(tok, self._device)
-                residents.append(_block(tok))
-            fetched, _ = _fetch(self._streams, self._rates, self._core, self._device)
-            resident = self._assemble(residents, fetched)
+            # Each core's prologue runs on its own DMA lane; the words and
+            # lane-busy time land in record 0's initial_fetch_* fields so the
+            # measured fetch totals match the plan's arrival-0 charge.
+            pro_futs = [
+                dma.submit(_prologue, ss, self._rates, core, self._device)
+                for dma, ss, core in zip(self._dma, self._streams,
+                                         self._core_ids)
+            ]
+            pro = [f.result() for f in pro_futs]
+            residents = [p[0] for p in pro]
+            init_stats = [(p[2], p[3]) for p in pro]
+            per_core_toks = [self._assemble(residents[c], pro[c][1])
+                             for c in range(ncores)]
+            step_toks = self._step_tokens(per_core_toks)
             if self._on_end:
-                self._on_end(0, self._streams)
+                self._on_end(0, self._on_end_arg())
 
-            step_fetch_words = sum(
-                s.token_words * r for s, r in zip(self._streams, self._rates))
+            step_words = [
+                sum(s.token_words * r for s, r in zip(ss, self._rates))
+                for ss in self._streams
+            ]
+            n_out = len(self._out_streams[0])
 
             for h in range(total):
                 t0 = time.perf_counter()
                 last = h == total - 1
-                fut: Future | None = None
+                futs: list[Future] | None = None
                 if not last:
                     if self._prefetch:
-                        fut = self._dma.submit(
-                            _fetch, self._streams, self._rates, self._core,
-                            self._device,
-                        )
+                        futs = [
+                            dma.submit(_fetch, ss, self._rates, core,
+                                       self._device)
+                            for dma, ss, core in zip(self._dma, self._streams,
+                                                     self._core_ids)
+                        ]
                     else:
-                        nxt, fetch_s = _fetch(
-                            self._streams, self._rates, self._core, self._device)
+                        nxts = [
+                            _fetch(ss, self._rates, core, self._device)
+                            for ss, core in zip(self._streams, self._core_ids)
+                        ]
 
                 t_c = time.perf_counter()
-                out = self._step(state, resident)
-                if self._out_streams:
+                out = self._step(state, step_toks)
+                if n_out:
                     state, out_tokens = out
                 else:
                     state, out_tokens = out, ()
@@ -319,59 +488,110 @@ class HyperstepRunner:
 
                 wait_s = 0.0
                 if not last:
-                    if fut is not None:
+                    if futs is not None:
                         t_w = time.perf_counter()
-                        nxt, fetch_s = fut.result()  # bulk synchronisation
+                        nxts = [f.result() for f in futs]  # bulk synchronisation
                         wait_s = time.perf_counter() - t_w
-                    resident = self._assemble(residents, nxt)
+                    fetch_secs = [s for _, s in nxts]
+                    per_core_toks = [
+                        self._assemble(residents[c], nxts[c][0])
+                        for c in range(ncores)
+                    ]
+                    step_toks = self._step_tokens(per_core_toks)
                 else:
-                    fetch_s = 0.0
+                    fetch_secs = [0.0] * ncores
 
                 # join the *previous* write-back (it overlapped this compute),
                 # then put this step's outputs on the lane for the next overlap
                 join_writeback()
-                if self._out_streams:
+                flush = [(h + 1) % e == 0 for e in self._out_every]
+                wb_now = [(0, 0.0)] * ncores
+                if n_out and any(flush):
+                    per_core_out = self._per_core_out(out_tokens)
                     if self._prefetch:
                         # absolute index: records accumulate across run() calls
                         wb_idx = len(self.records)
-                        wb_fut = self._dma.submit(
-                            _writeback, self._out_streams, self._core, out_tokens)
+                        wb_futs = [
+                            dma.submit(
+                                _writeback,
+                                [s for s, f in zip(outs, flush) if f],
+                                core,
+                                [t for t, f in zip(toks, flush) if f])
+                            for dma, outs, core, toks in zip(
+                                self._dma, self._out_streams, self._core_ids,
+                                per_core_out)
+                        ]
                     else:
-                        words, seconds = _writeback(
-                            self._out_streams, self._core, out_tokens)
+                        wb_now = [
+                            _writeback(
+                                [s for s, f in zip(outs, flush) if f],
+                                core,
+                                [t for t, f in zip(toks, flush) if f])
+                            for outs, core, toks in zip(
+                                self._out_streams, self._core_ids,
+                                per_core_out)
+                        ]
 
-                self.records.append(
-                    HyperstepRecord(
+                step_s = time.perf_counter() - t0
+                for c in range(ncores):
+                    self.core_records[c].append(HyperstepRecord(
                         index=h,
                         compute_seconds=compute_s,
-                        fetch_seconds=fetch_s,
-                        step_seconds=time.perf_counter() - t0,
-                        fetch_words=step_fetch_words if not last else 0,
+                        fetch_seconds=fetch_secs[c],
+                        step_seconds=step_s,
+                        fetch_words=step_words[c] if not last else 0,
                         fetch_wait_seconds=wait_s,
-                        writeback_seconds=0.0 if self._prefetch else (
-                            seconds if self._out_streams else 0.0),
-                        writeback_words=0 if self._prefetch else (
-                            words if self._out_streams else 0),
-                    )
-                )
+                        writeback_seconds=wb_now[c][1],
+                        writeback_words=wb_now[c][0],
+                        initial_fetch_seconds=init_stats[c][1] if h == 0 else 0.0,
+                        initial_fetch_words=init_stats[c][0] if h == 0 else 0,
+                    ))
+                # the bulk-synchronous aggregate: the max over cores, the
+                # quantity Eq. 1's per-hyperstep max prices
+                self.records.append(HyperstepRecord(
+                    index=h,
+                    compute_seconds=compute_s,
+                    fetch_seconds=max(fetch_secs),
+                    step_seconds=step_s,
+                    fetch_words=max(step_words) if not last else 0,
+                    fetch_wait_seconds=wait_s,
+                    writeback_seconds=max(s for _, s in wb_now),
+                    writeback_words=max(w for w, _ in wb_now),
+                    initial_fetch_seconds=(
+                        max(s for _, s in init_stats) if h == 0 else 0.0),
+                    initial_fetch_words=(
+                        max(w for w, _ in init_stats) if h == 0 else 0),
+                ))
                 if self._on_end and not last:
                     # Cursor adjustments (seek/MOVE) for the *following* fetch.
-                    self._on_end(h + 1, self._streams)
+                    self._on_end(h + 1, self._on_end_arg())
             join_writeback()
             return state
         finally:
             # join any in-flight DMA work *before* closing: close() rewinds
             # the cursors, and a background move_down/move_up landing
             # afterwards would corrupt the replay state of the next run()
-            self._dma.shutdown(wait=True)
-            if wb_fut is not None:
+            for dma in self._dma:
+                dma.shutdown(wait=True)
+            if any(f is not None for f in wb_futs):
                 join_writeback()
-            for s in [*self._streams, *self._out_streams]:
-                s.close(self._core)
+            for core, ins, outs in zip(self._core_ids, self._streams,
+                                       self._out_streams):
+                for s in [*ins, *outs]:
+                    s.close(core)
 
     @property
     def total_seconds(self) -> float:
         return sum(r.step_seconds for r in self.records)
+
+    @property
+    def total_fetch_words(self) -> int:
+        """Words streamed down over the run, max-core, incl. the initial fetch.
+
+        Matches ``plan.total_fetch_words()`` (the enumerated arrival schedule)
+        for plans whose fetch volume is uniform per hyperstep.
+        """
+        return sum(r.fetch_words + r.initial_fetch_words for r in self.records)
 
     # -- cost-model hooks ----------------------------------------------------
 
@@ -396,12 +616,17 @@ class HyperstepRunner:
         if pred is None:
             raise RuntimeError("construct the runner with plan= and machine=")
         meas = self.total_seconds
+        planned_words = self.plan.total_fetch_words()
+        if len(self.records) != self.plan.num_hypersteps:
+            planned_words *= len(self.records) / self.plan.num_hypersteps
         return {
             "predicted_seconds": pred,
             "measured_seconds": meas,
             "pred_over_meas": pred / max(meas, 1e-12),
             "bandwidth_heavy_predicted": float(self.plan.bandwidth_heavy(self.machine)),
             "bandwidth_heavy_measured": float(self._measured_bandwidth_heavy()),
+            "fetch_words_planned": planned_words,
+            "fetch_words_measured": float(self.total_fetch_words),
         }
 
     def _measured_bandwidth_heavy(self) -> bool:

@@ -146,6 +146,17 @@ class StreamPlan:
     steps whose token is skipped). ``mean_flops_per_hyperstep`` backs the
     closed-form cost path for grids too large to enumerate.
 
+    A hyperstep's compute side may itself be an *inner BSP program* on the
+    p-core grid (the paper's two-level construction, Eq. 2):
+    ``comm_words_per_hyperstep`` is the program's summed h-relation ``Σ_i h_i``
+    in words, ``supersteps_per_hyperstep`` its superstep count — the cost
+    functions then price each hyperstep's compute side as
+    ``flops + g·comm + l·supersteps``, the ``max_s w_i(s) + g·h_i + l`` term
+    summed over inner supersteps. Streamed token specs describe *one core's*
+    streams (Eq. 1 takes the max over cores; on a homogeneous grid every core
+    moves the same volume). Both default to 0: a plan without an inner
+    program prices exactly as before.
+
     ``dimension_semantics`` marks each grid axis "parallel" or "arbitrary"
     for Mosaic; the innermost "arbitrary" axes are the sequential hyperstep
     stream on a single chip.
@@ -159,6 +170,8 @@ class StreamPlan:
     dimension_semantics: tuple[str, ...] = ()
     flops_per_hyperstep: float | Callable[..., float] = 0.0
     mean_flops_per_hyperstep: float | None = None
+    comm_words_per_hyperstep: float = 0.0
+    supersteps_per_hyperstep: float = 0.0
     # memoised fetch/write-back schedules — the plan is frozen, walks are O(grid)
     _fetch_cache: list | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
@@ -270,6 +283,8 @@ class StreamPlan:
                     bsp_flops=self._flops_at(coords),
                     fetch_words=[float(nxt)],
                     writeback_words=[float(writebacks[h])],
+                    comm_words=self.comm_words_per_hyperstep,
+                    supersteps=self.supersteps_per_hyperstep,
                 )
             )
         return costs
@@ -300,16 +315,23 @@ class StreamPlan:
             return self.total_flops / self.num_hypersteps
         return float(self.flops_per_hyperstep)
 
+    def _superstep_terms(self, acc: BSPAccelerator) -> float:
+        """Per-hyperstep ``g·Σh_i + l·supersteps`` of the inner BSP program."""
+        return (acc.g * self.comm_words_per_hyperstep
+                + acc.l * self.supersteps_per_hyperstep)
+
     def cost(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
-        """Predicted T̃ in FLOP units (paper Eq. 1) on accelerator ``acc``.
+        """Predicted T̃ in FLOP units (paper Eq. 1 / Eq. 2) on ``acc``.
 
         Eq. 1 sums C_i over *all* opened streams, up and down: the link side
         of each hyperstep's ``max`` is its prefetch volume plus its write-back
-        volume. ``exact=None`` enumerates both schedules when the grid is
-        small enough, else uses the closed-form estimate ``H · max(mean_flops,
-        e·ΣC_i)`` — every streamed token, down *and* up, charged every
-        hyperstep, per-step work averaged (see the ENUMERATION_LIMIT note on
-        its bias).
+        volume; the compute side is the inner BSP program's
+        ``flops + g·comm + l·supersteps`` (Eq. 2's ``N(2k³ + 2k²g + l)`` for
+        two-level Cannon). ``exact=None`` enumerates both schedules when the
+        grid is small enough, else uses the closed-form estimate ``H ·
+        max(mean_flops + g·comm + l·s, e·ΣC_i)`` — every streamed token, down
+        *and* up, charged every hyperstep, per-step work averaged (see the
+        ENUMERATION_LIMIT note on its bias).
         """
         if exact is None:
             exact = self.num_hypersteps <= ENUMERATION_LIMIT
@@ -317,7 +339,8 @@ class StreamPlan:
             return bsps_cost(self.hyperstep_costs(), acc)
         words = float(sum(t.words for t in self.inputs)
                       + sum(t.words for t in self.outputs))
-        return self.num_hypersteps * max(self.mean_flops, acc.e * words)
+        return self.num_hypersteps * max(
+            self.mean_flops + self._superstep_terms(acc), acc.e * words)
 
     def predicted_seconds(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
         return acc.flops_to_seconds(self.cost(acc, exact=exact))
@@ -341,11 +364,13 @@ class StreamPlan:
     def bandwidth_heavy(self, acc: BSPAccelerator, *, exact: bool | None = None) -> bool:
         """True if streaming the tokens — down *or* up — costs more than
         computing on them (paper §2 criterion, summed over the whole pass).
+        The compute side includes the inner BSP program's superstep terms.
         ``exact=False`` stays O(1) on both sides of the comparison."""
         flops = (
             self.mean_flops * self.num_hypersteps
             if exact is False else self.total_flops
         )
+        flops += self._superstep_terms(acc) * self.num_hypersteps
         link_words = (self.total_fetch_words(exact=exact)
                       + self.total_writeback_words(exact=exact))
         return acc.e * link_words > flops
@@ -417,6 +442,8 @@ def host_plan(
     out_streams: Sequence[Any] = (),
     out_every: Sequence[int] | None = None,
     scratch: tuple[ScratchSpec, ...] = (),
+    comm_words_per_hyperstep: float = 0.0,
+    supersteps_per_hyperstep: float = 0.0,
 ) -> StreamPlan:
     """Build a pod/host-level StreamPlan from open-able ``Stream`` objects.
 
@@ -434,9 +461,13 @@ def host_plan(
 
     ``scratch`` declares persistent local state the program keeps between
     hypersteps (e.g. a serving KV cache), so :attr:`StreamPlan.vmem_bytes`
-    budgets the host run like a kernel. The resulting plan prices a
-    :class:`~repro.core.hyperstep.HyperstepRunner` run with the same Eq. 1
-    used one level down for the Pallas kernels.
+    budgets the host run like a kernel. When the per-hyperstep step is itself
+    an inner BSP program on a p-core grid (a multi-core
+    :class:`~repro.core.hyperstep.HyperstepRunner`), pass *one core's*
+    streams plus ``comm_words_per_hyperstep`` / ``supersteps_per_hyperstep``
+    so Eq. 2's ``g·h + l`` superstep terms are priced. The resulting plan
+    prices a :class:`~repro.core.hyperstep.HyperstepRunner` run with the same
+    Eq. 1 used one level down for the Pallas kernels.
     """
     if not streams and not out_streams:
         raise ValueError("need at least one stream (down or up)")
@@ -493,6 +524,8 @@ def host_plan(
         scratch=scratch,
         dimension_semantics=("arbitrary",),
         flops_per_hyperstep=flops_per_hyperstep,
+        comm_words_per_hyperstep=comm_words_per_hyperstep,
+        supersteps_per_hyperstep=supersteps_per_hyperstep,
     )
 
 

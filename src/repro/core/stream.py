@@ -237,6 +237,45 @@ class StreamSet:
             streams.append(self.create(backing, token_size, name=f"{name}[{s}]"))
         return streams
 
+    def create_block_grid(self, matrix: Any, m_blocks: int, n_grid: int = 1,
+                          *, order: str = "row", name: str = "") -> list[Stream]:
+        """Outer-block streams of a square matrix for an N×N core grid (§3.2).
+
+        Cuts ``matrix`` into M×M outer blocks of side K = n/M, each of which
+        is block-distributed over the N×N core grid in k×k sub-blocks
+        (k = K/N). The stream for core (ci, cj) holds that core's sub-block
+        of every outer block, outer blocks ordered row-major (``"row"``, the
+        paper's Σ^A layout) or column-major (``"col"``, Σ^B). Returns the
+        p = N² streams in row-major core order — one per core, each with
+        M² one-sub-block tokens, ready for a multi-core
+        :class:`~repro.core.hyperstep.HyperstepRunner`.
+        """
+        if order not in ("row", "col"):
+            raise ValueError(f"order must be 'row' or 'col', got {order!r}")
+        n = matrix.shape[0]
+        if matrix.ndim != 2 or matrix.shape[1] != n:
+            raise ValueError(f"need a square matrix, got {matrix.shape}")
+        if n % (m_blocks * n_grid) != 0:
+            raise ValueError(
+                f"n={n} must be divisible by M·N={m_blocks * n_grid} "
+                "(paper pads with zeros)")
+        big = n // m_blocks            # outer block side K
+        k = big // n_grid              # per-core sub-block side
+        coords = [(r, c) for r in range(m_blocks) for c in range(m_blocks)]
+        if order == "col":
+            coords = [(r, c) for c in range(m_blocks) for r in range(m_blocks)]
+        mat = np.asarray(matrix)
+        streams = []
+        for ci in range(n_grid):
+            for cj in range(n_grid):
+                toks = np.stack([
+                    mat[r * big + ci * k: r * big + (ci + 1) * k,
+                        c * big + cj * k: c * big + (cj + 1) * k]
+                    for r, c in coords])
+                streams.append(
+                    self.create(toks, 1, name=f"{name}[{ci},{cj}]"))
+        return streams
+
     def __getitem__(self, stream_id: int) -> Stream:
         return self._streams[stream_id]
 

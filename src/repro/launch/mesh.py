@@ -20,7 +20,20 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(model: int | None = None) -> Mesh:
-    """A small mesh over whatever devices exist (tests / CPU examples)."""
+    """A small mesh over whatever devices exist (tests / CPU examples).
+
+    ``model`` must divide the device count exactly: silently flooring
+    ``n // model`` would drop devices from the mesh, and ``model > n`` would
+    surface as an opaque shape error from ``make_mesh``.
+    """
     n = len(jax.devices())
     model = model or 1
+    if model > n:
+        raise ValueError(
+            f"model={model} exceeds the {n} available device(s); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count to fake more")
+    if n % model != 0:
+        raise ValueError(
+            f"model={model} does not divide the {n} available device(s); "
+            f"a ({n // model}, {model}) mesh would drop {n % model} of them")
     return jax.make_mesh((n // model, model), ("data", "model"))

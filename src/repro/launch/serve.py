@@ -70,6 +70,32 @@ def make_prefill(cfg):
     return jax.jit(prefill, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=8)
+def compiled_serve_fns(cfg, temperature: float):
+    """(prefill, decode_fn) for a config, built once per (cfg, temperature).
+
+    The serving hot path calls :func:`generate` per request; rebuilding the
+    jitted prefill/decode closures each time would retrace and recompile the
+    whole model per request. ``ModelConfig`` is a frozen dataclass, so it
+    keys an lru_cache directly; ``temperature`` is baked into the decode
+    sampler's trace (0 = argmax branch), hence part of the key.
+    """
+    serve_step = make_serve_step(cfg)
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def decode_fn(params, logits, cache, key):
+        key, sub = jax.random.split(key)
+        if temperature > 0:
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+        tok = tok.astype(jnp.int32)[:, None]
+        logits, cache = serve_step(params, cache, {"tokens": tok})
+        return tok, logits, cache, key
+
+    return make_prefill(cfg), decode_fn
+
+
 def generate(
     cfg,
     params,
@@ -90,27 +116,18 @@ def generate(
         int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
         for x in jax.tree_util.tree_leaves(cache) if hasattr(x, "shape"))
 
+    # compiled once per (cfg, temperature); repeated generate() calls (the
+    # serving hot path) reuse the jitted prefill and decode step
+    prefill, decode_fn = compiled_serve_fns(cfg, temperature)
+
     # -- prefill: one dispatch over the whole prompt -------------------------
     prompt_tokens = prompt_tokens.astype(jnp.int32)
     t0 = time.perf_counter()
-    logits, cache = make_prefill(cfg)(params, cache, prompt_tokens)
+    logits, cache = prefill(params, cache, prompt_tokens)
     jax.block_until_ready(logits)
     prefill_s = time.perf_counter() - t0
 
     # -- decode: one hyperstep per generated token ---------------------------
-    serve_step = make_serve_step(cfg)
-
-    @functools.partial(jax.jit, donate_argnums=(2,))
-    def decode_fn(params, logits, cache, key):
-        key, sub = jax.random.split(key)
-        if temperature > 0:
-            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)
-        tok = tok.astype(jnp.int32)[:, None]
-        logits, cache = serve_step(params, cache, {"tokens": tok})
-        return tok, logits, cache, key
-
     streams = StreamSet()
     generated = streams.create(np.zeros((steps, b), np.int32), 1, name="generated")
     plan = host_plan(

@@ -1,0 +1,297 @@
+"""Multi-core BSPS: p-core HyperstepRunner + two-level Cannon (paper Eq. 2).
+
+The paper's central construction is two-level: an outer hyperstep loop
+streaming blocks from external memory wrapped around an inner BSP program on
+a p-core grid, priced by Eq. 2. These tests pin:
+
+* the runner's multi-core mode — per-core stream sets and DMA lanes, the
+  shared bulk-sync barrier, per-core records whose max is the aggregate row;
+* sparse up-stream flushing (``out_every``) and the initial-fetch accounting
+  that makes measured fetch words match the plan's enumerated schedule;
+* ``HyperstepCost``'s inner-BSP superstep term and its Eq. 2 closed-form
+  agreement (``cannon_hyperstep`` / ``cannon_bsps_cost`` / ``cannon_k_equal``);
+* the end-to-end two-level Cannon: p-core run matches the single-core run
+  and the numpy reference, per-core records carry Eq. 2's per-hyperstep
+  volumes, and ``autotune`` selects the outer block count M under the
+  local-memory budget;
+* the serve launcher's compile cache (one build per (cfg, temperature)).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EPIPHANY_III,
+    HyperstepRunner,
+    StreamSet,
+    cannon_bsps_cost,
+    cannon_k_equal,
+    host_plan,
+)
+from repro.core import plan as planlib
+from repro.core.bsp import BSPAccelerator
+from repro.core.cost import cannon_hyperstep
+from repro.distributed.cannon import cannon_plan, two_level_cannon
+
+ACC = BSPAccelerator(p=4, g=1.0, l=2.0, r=1e9, e=1.0,
+                     L=1 << 20, E=1 << 30, word_bytes=4, name="test-grid")
+
+
+# ---------------------------------------------------- multi-core runner ----
+
+
+def test_multicore_runner_matches_single_core_and_numpy():
+    """Cyclic inner product on p cores == single core == numpy (paper §3.1)."""
+    p, n, tok = 4, 256, 16
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(n).astype(np.float32)
+    u = rng.standard_normal(n).astype(np.float32)
+
+    ss = StreamSet()
+    vs = ss.create_cyclic(v, p, tok)
+    us = ss.create_cyclic(u, p, tok)
+    per_core = [[vs[c], us[c]] for c in range(p)]
+
+    def step(acc, toks):
+        # toks[slot][core]: each core multiplies its resident tokens, the
+        # inner BSP program's superstep is the p-way reduction
+        return acc + sum(float(np.dot(toks[0][c], toks[1][c]))
+                         for c in range(p))
+
+    runner = HyperstepRunner(step, per_core, cores=p)
+    out = runner.run(0.0)
+    assert out == pytest.approx(float(np.dot(v, u)), rel=1e-4)
+
+    # single-core reference over the same data
+    ss2 = StreamSet()
+    s1, s2 = ss2.create(v, tok), ss2.create(u, tok)
+    ref = HyperstepRunner(
+        lambda a, t: a + float(np.dot(t[0], t[1])), [s1, s2]).run(0.0)
+    assert out == pytest.approx(ref, rel=1e-4)
+
+
+def test_multicore_records_per_core_and_aggregate():
+    p, steps = 2, 4
+    ss = StreamSet()
+    per_core = [[ss.create(np.full(steps * 8, c, np.float32), 8)]
+                for c in range(p)]
+    runner = HyperstepRunner(lambda st, toks: st + 1, per_core, cores=p)
+    assert runner.run(0) == steps
+    assert len(runner.core_records) == p
+    for recs in runner.core_records:
+        assert len(recs) == steps
+        # every core fetched its 8-word token on every non-terminal step
+        assert [r.fetch_words for r in recs] == [8] * (steps - 1) + [0]
+    # the aggregate is the bulk-synchronous max over cores
+    for h, agg in enumerate(runner.records):
+        assert agg.fetch_words == max(
+            recs[h].fetch_words for recs in runner.core_records)
+        assert agg.step_seconds >= agg.compute_seconds
+
+
+def test_multicore_validates_stream_sets():
+    ss = StreamSet()
+    a = ss.create(np.zeros(8, np.float32), 4)
+    b = ss.create(np.zeros(8, np.float32), 4)
+    with pytest.raises(ValueError, match="one stream set per core"):
+        HyperstepRunner(lambda s, t: s, [[a], [b]], cores=3)
+    with pytest.raises(ValueError, match="same stream slots"):
+        HyperstepRunner(lambda s, t: s, [[a], [b, b]], cores=2)
+
+
+def test_out_every_flushes_once_per_interval():
+    """An out stream with out_every=k writes (and advances) once per k steps."""
+    every, steps = 3, 6
+    ss = StreamSet()
+    down = ss.create(np.arange(steps, dtype=np.float32), 1)
+    out = ss.create(np.zeros(steps // every, np.float32), 1)
+
+    def step(state, toks):
+        state = state + float(toks[0][0])
+        return state, [np.asarray([state], np.float32)]
+
+    runner = HyperstepRunner(step, [down], out_streams=[out],
+                             out_every=[every])
+    runner.run(0.0)
+    assert len(runner.records) == steps
+    # flushes landed on hypersteps 2 and 5: running sums 0+1+2 and 0+..+5
+    np.testing.assert_allclose(np.asarray(out.data), [3.0, 15.0])
+    flushed = [r for r in runner.records if r.writeback_words > 0]
+    assert [r.index for r in flushed] == [every - 1, 2 * every - 1]
+
+
+def test_multicore_slot_level_none_skips_write():
+    """The documented skip contract: a step may return None for a whole out
+    slot in multi-core mode (expanded to every core's lane)."""
+    p, steps = 2, 4
+    ss = StreamSet()
+    ins = [[ss.create(np.arange(steps, dtype=np.float32), 1)]
+           for _ in range(p)]
+    outs = [[ss.create(np.zeros(steps, np.float32), 1)] for _ in range(p)]
+
+    def step(state, toks):
+        h = state
+        if h % 2 == 0:
+            return h + 1, [None]                       # slot-level skip
+        return h + 1, [[np.asarray([float(h)], np.float32)
+                        for _ in range(p)]]
+
+    runner = HyperstepRunner(step, ins, cores=p, out_streams=outs)
+    runner.run(0)
+    for core_outs in outs:
+        # skipped steps advanced the cursor for free (zeros stay)
+        np.testing.assert_allclose(np.asarray(core_outs[0].data),
+                                   [0.0, 1.0, 0.0, 3.0])
+    skipped = [r for r in runner.records if r.writeback_words == 0]
+    assert len(skipped) == steps // 2
+
+
+def test_initial_fetch_attributed_and_matches_plan_schedule():
+    """Satellite: the pre-loop fetch lands in record 0 and the summed words
+    equal the plan's enumerated arrival schedule (Eq. 1's fetch side)."""
+    ss = StreamSet()
+    data = ss.create(np.zeros(8 * 4, np.float32), 4)      # 8 tokens of 4 words
+    weights = ss.create(np.ones(16, np.float32), 16)      # resident, rate 0
+    plan = host_plan([data, weights], rates=[1, 0], flops_per_hyperstep=1.0)
+    runner = HyperstepRunner(
+        lambda st, t: st, [data, weights], rates=[1, 0],
+        plan=plan, machine=ACC)
+    runner.run(None)
+    rec0 = runner.records[0]
+    # hyperstep 0's token (4 words) + the resident operand (16 words)
+    assert rec0.initial_fetch_words == 20
+    assert rec0.initial_fetch_seconds > 0
+    assert all(r.initial_fetch_words == 0 for r in runner.records[1:])
+    assert runner.total_fetch_words == sum(plan.fetch_schedule())
+    row = runner.predicted_vs_measured()
+    assert row["fetch_words_measured"] == row["fetch_words_planned"]
+
+
+# ------------------------------------------------- Eq. 2 cost composition ----
+
+
+def test_cannon_hyperstep_carries_superstep_terms():
+    acc = dataclasses.replace(EPIPHANY_III, g=1.0)
+    k, n_grid = 8, 4
+    h = cannon_hyperstep(acc, k, n_grid)
+    want = n_grid * (2.0 * k**3 + 2.0 * k**2 * acc.g + acc.l)
+    assert h.compute_cost(acc) == pytest.approx(want)
+    assert h.cost(acc) == pytest.approx(max(want, 2.0 * k**2 * acc.e))
+    # M³ hypersteps of this price are exactly Eq. 2
+    m = 3
+    assert m**3 * cannon_hyperstep(acc, k, n_grid).cost(acc) == pytest.approx(
+        cannon_bsps_cost(acc, k * n_grid * m, m, n_grid))
+
+
+def test_cannon_hyperstep_crossover_agrees_with_k_equal():
+    acc = dataclasses.replace(EPIPHANY_III, g=1.0)
+    k_eq = cannon_k_equal(acc)
+    n_grid = acc.core_grid_side()
+    below = cannon_hyperstep(acc, int(k_eq) - 2, n_grid)
+    above = cannon_hyperstep(acc, int(k_eq) + 3, n_grid)
+    assert below.bandwidth_heavy(acc)
+    assert not above.bandwidth_heavy(acc)
+
+
+def test_cannon_plan_prices_eq2_closed_form():
+    """On a compute-heavy machine every hyperstep's max picks the inner BSP
+    term, so the enumerated plan cost is exactly Eq. 2's M³·N(2k³+2k²g+l)."""
+    acc = dataclasses.replace(EPIPHANY_III, g=1.0, e=1.0)
+    n, m, n_grid = 64, 2, 2
+    plan = cannon_plan(n, m, n_grid)
+    assert plan.num_hypersteps == m**3
+    assert plan.cost(acc) == pytest.approx(cannon_bsps_cost(acc, n, m, n_grid))
+    assert not plan.bandwidth_heavy(acc)
+    # the superstep terms are visible: zeroing g and l lowers the price
+    flat = dataclasses.replace(acc, g=0.0, l=0.0)
+    assert plan.cost(flat) < plan.cost(acc)
+
+
+# ------------------------------------------------- two-level Cannon e2e ----
+
+
+def test_two_level_cannon_single_core_matches_numpy():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    c, runner = two_level_cannon(a, b, 4, machine=ACC)
+    assert float(np.abs(c - a @ b).max()) < 1e-4
+    assert len(runner.records) == 64
+    row = runner.predicted_vs_measured()
+    assert row["predicted_seconds"] > 0 and row["measured_seconds"] > 0
+
+
+def test_two_level_cannon_multicore_matches_references():
+    """p-core run == single-core run == numpy; per-core records carry the
+    2k² per-hyperstep stream volume Eq. 2's fetch side prices."""
+    rng = np.random.default_rng(2)
+    n, m, n_grid = 64, 2, 2
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+
+    c_multi, runner = two_level_cannon(a, b, m, n_grid=n_grid, machine=ACC)
+    c_single, _ = two_level_cannon(a, b, m, machine=ACC)
+    assert float(np.abs(c_multi - a @ b).max()) < 1e-4
+    np.testing.assert_allclose(c_multi, c_single, rtol=1e-5, atol=1e-5)
+
+    k = n // (m * n_grid)
+    assert len(runner.core_records) == n_grid * n_grid
+    for recs in runner.core_records:
+        assert len(recs) == m**3
+        assert all(r.fetch_words == 2 * k * k for r in recs[:-1])
+        assert recs[0].initial_fetch_words == 2 * k * k
+        # C flushes once per outer product: k² words, m² flushes
+        assert sum(r.writeback_words for r in recs) == k * k * m * m
+    # the runner's measured fetch volume is the plan's enumerated schedule
+    assert runner.total_fetch_words == sum(runner.plan.fetch_schedule())
+
+
+def test_autotune_selects_m_under_memory_budget():
+    """Eq. 2 prefers the largest outer block (smallest M) that fits L — the
+    paper's 'size tokens as large as local memory allows'."""
+    n = 64
+    # 7k² words of double-buffered tokens + scratch per core (k = n/M):
+    # M=1 needs 28672 words, M=2 needs 7168 — budget L=8192 forces M=2
+    acc = dataclasses.replace(ACC, L=8192)
+    best, choices = planlib.autotune(
+        lambda m_blocks: cannon_plan(n, m_blocks, 1),
+        [{"m_blocks": m} for m in (1, 2, 4, 8)], acc)
+    assert best.params["m_blocks"] == 2
+    by_m = {c.params["m_blocks"]: c for c in choices}
+    assert not by_m[1].feasible
+    assert by_m[2].feasible and by_m[4].feasible
+    # among feasible candidates the predicted cost still increases with M
+    assert by_m[2].predicted_seconds < by_m[4].predicted_seconds
+
+
+# ------------------------------------------------------ serve compile cache ----
+
+
+def test_serve_generate_reuses_compiled_fns():
+    """Satellite: repeated generate() calls must not rebuild/re-jit the
+    prefill and decode closures (the serving hot path)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.serve import compiled_serve_fns, generate
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_config("minicpm-2b", smoke=True),
+                              num_layers=2, dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.zeros((1, 3), jnp.int32)
+
+    compiled_serve_fns.cache_clear()
+    generate(cfg, params, prompt, steps=2, machine=ACC)
+    info = compiled_serve_fns.cache_info()
+    assert info.misses == 1
+    generate(cfg, params, prompt, steps=2, machine=ACC)
+    info = compiled_serve_fns.cache_info()
+    assert info.hits == 1 and info.misses == 1
+    # the cached pair is literally the same objects
+    p1, d1 = compiled_serve_fns(cfg, 0.0)
+    p2, d2 = compiled_serve_fns(cfg, 0.0)
+    assert p1 is p2 and d1 is d2
