@@ -1,0 +1,187 @@
+"""Dispatch benchmark: host-loop vs compiled hyperstep execution (ISSUE 4).
+
+Times the same three BSPS programs — two-level Cannon, SpMV, and serve decode
+— through both execution modes of :class:`repro.core.hyperstep.HyperstepRunner`
+(DESIGN.md §5):
+
+* **host loop** (measure mode): one jitted dispatch + bulk sync per hyperstep;
+* **compiled**: the whole program as one ``lax.scan`` dispatch
+  (``run(..., compiled=True)``).
+
+and writes ``BENCH_dispatch.json`` — hypersteps/sec per mode, the speedup,
+and each mode's predicted-vs-measured gap — seeding the repo's ``BENCH_*``
+perf trajectory. Timing uses the shared ``median_seconds`` protocol (warmup
+excluded, median of repeats), so the compiled numbers exclude the one-off
+trace, exactly like a warm serving/training process.
+
+Run:  python -m benchmarks.bsps_bench [--smoke] [--check] [--out PATH]
+      (--check exits nonzero if compiled is slower than the host loop)
+Also exposed as ``benchmarks.run bsps_bench`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import calibrate
+from repro.core.plan import median_seconds
+
+
+def _case_cannon(smoke: bool, acc) -> dict:
+    from repro.distributed.cannon import cannon_compiled_state, make_cannon_runner
+
+    n, m_blocks = (64, 4) if smoke else (256, 4)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    total = m_blocks**3
+
+    comp_runner, _, _ = make_cannon_runner(a, b, m_blocks, machine=acc)
+
+    def comp_run():
+        comp_runner.run(cannon_compiled_state(n, m_blocks, np.float32),
+                        num_hypersteps=total, compiled=True)
+
+    comp_run()                      # trace/compile outside the records
+    comp_runner.reset_records()     # pred-vs-meas covers warm runs only
+    comp_s = median_seconds(comp_run)
+    host_runner, _, host_state = make_cannon_runner(
+        a, b, m_blocks, machine=acc, compiled=False)
+    host_runner.run(host_state, num_hypersteps=total)   # warm the jitted step
+    host_runner.reset_records()
+    host_s = median_seconds(lambda: host_runner.run(
+        host_state, num_hypersteps=total))
+    return {
+        "hypersteps": total,
+        "host_seconds": host_s,
+        "compiled_seconds": comp_s,
+        "host_steps_per_s": total / host_s,
+        "compiled_steps_per_s": total / comp_s,
+        "speedup": host_s / comp_s,
+        "host_pred_over_meas":
+            host_runner.predicted_vs_measured()["pred_over_meas"],
+        "compiled_pred_over_meas":
+            comp_runner.predicted_vs_measured()["pred_over_meas"],
+    }
+
+
+_EXAMPLES_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples")
+
+
+def _case_spmv(smoke: bool, acc) -> dict:
+    if _EXAMPLES_DIR not in sys.path:       # cwd-independent example import
+        sys.path.insert(0, _EXAMPLES_DIR)
+    from bsps_spmv import make_ell_blocks, make_spmv_runner
+
+    n = 1 << 12 if smoke else 1 << 15
+    block_rows = 128 if smoke else 512
+    cols, vals, x = make_ell_blocks(n, 0.01, block_rows)
+    total = cols.shape[0]
+
+    comp_runner, _, comp_state = make_spmv_runner(cols, vals, x, acc)
+    comp_runner.run(comp_state(), compiled=True)        # trace/compile
+    comp_runner.reset_records()     # pred-vs-meas covers warm runs only
+    comp_s = median_seconds(
+        lambda: comp_runner.run(comp_state(), compiled=True))
+    host_runner, _, host_state = make_spmv_runner(cols, vals, x, acc)
+    host_runner.run(host_state())                       # warm the jitted step
+    host_runner.reset_records()
+    host_s = median_seconds(lambda: host_runner.run(host_state()))
+    return {
+        "hypersteps": total,
+        "host_seconds": host_s,
+        "compiled_seconds": comp_s,
+        "host_steps_per_s": total / host_s,
+        "compiled_steps_per_s": total / comp_s,
+        "speedup": host_s / comp_s,
+        "host_pred_over_meas":
+            host_runner.predicted_vs_measured()["pred_over_meas"],
+        "compiled_pred_over_meas":
+            comp_runner.predicted_vs_measured()["pred_over_meas"],
+    }
+
+
+def _case_serve_decode(smoke: bool, acc) -> dict:
+    from repro.configs import get_config
+    from repro.launch.serve import generate
+    from repro.models import model as M
+
+    cfg = get_config("minicpm-2b", smoke=True)
+    cfg = dataclasses.replace(cfg, num_layers=2, dtype="float32")
+    batch, prompt_len, steps = (2, 4, 16) if smoke else (4, 16, 64)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.zeros((batch, prompt_len), jnp.int32)
+
+    def decode_time(compiled: bool) -> float:
+        _, stats = generate(cfg, params, prompt, steps=steps, machine=acc,
+                            compiled=compiled)
+        return stats.decode_total_seconds
+
+    comp_s = median_seconds(lambda: decode_time(True))
+    host_s = median_seconds(lambda: decode_time(False))
+    return {
+        "hypersteps": steps,
+        "host_seconds": host_s,
+        "compiled_seconds": comp_s,
+        "host_steps_per_s": steps / host_s,
+        "compiled_steps_per_s": steps / comp_s,
+        "speedup": host_s / comp_s,
+    }
+
+
+CASES = {
+    "cannon": _case_cannon,
+    "spmv": _case_spmv,
+    "serve_decode": _case_serve_decode,
+}
+
+
+def run(smoke: bool = True, out_path: str = "BENCH_dispatch.json"):
+    """Yield CSV rows (benchmarks.run convention) and write the JSON file."""
+    acc = calibrate(fast=True)
+    report = {"benchmark": "dispatch", "smoke": smoke, "cases": {}}
+    rows = []
+    for name, case in CASES.items():
+        r = case(smoke, acc)
+        report["cases"][name] = r
+        rows.append((f"dispatch_{name}_host_steps_per_s",
+                     r["host_steps_per_s"], ""))
+        rows.append((f"dispatch_{name}_compiled_steps_per_s",
+                     r["compiled_steps_per_s"], ""))
+        rows.append((f"dispatch_{name}_speedup", r["speedup"],
+                     f"{r['hypersteps']} hypersteps"))
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if compiled is slower than the host "
+                         "loop on any case")
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    rows = run(smoke=args.smoke, out_path=args.out)
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")
+    if args.check:
+        slow = [n for n, v, _ in rows if n.endswith("_speedup") and v < 1.0]
+        if slow:
+            raise SystemExit(f"compiled mode slower than host loop: {slow}")
+
+
+if __name__ == "__main__":
+    main()

@@ -96,7 +96,10 @@ def run() -> list[tuple[str, float, str]]:
         return cannon_plan(n_c, m_blocks, 1)
 
     def measure_cannon(m_blocks):
-        two_level_cannon(a2, b2, m_blocks, machine=acc)
+        # measure mode: each call builds a fresh runner, so compiled mode
+        # would time XLA tracing, not execution (bsps_bench reuses one
+        # runner to time the compiled path properly)
+        two_level_cannon(a2, b2, m_blocks, machine=acc, compiled=False)
 
     best_c, c_choices = planlib.autotune(
         build_cannon, [{"m_blocks": m} for m in (1, 2, 4, 8)], acc,

@@ -7,6 +7,7 @@ Prints ``name,value,derived`` CSV per the repo convention. Modules:
   cannon_crossover — paper Figure 5 / Eq. 2 (runtime prediction + k_equal)
   plan_table       — StreamPlan autotune: Eq. 1 prediction vs measured per block size
   roofline_table   — assignment §Roofline (from recorded dry-run artifacts)
+  bsps_bench       — host-loop vs compiled dispatch (writes BENCH_dispatch.json)
 
 Select a subset: ``python -m benchmarks.run cannon_crossover``.
 """
@@ -17,6 +18,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    bsps_bench,
     cannon_crossover,
     inner_product,
     mem_speeds,
@@ -32,6 +34,7 @@ MODULES = {
     "cannon_crossover": cannon_crossover,
     "plan_table": plan_table,
     "roofline_table": roofline_table,
+    "bsps_bench": bsps_bench,
 }
 
 

@@ -10,18 +10,29 @@ pseudo-streams Σ^A/Σ^B (the ``MOVE`` reuse as cursor seeks), the inner Cannon
 degenerate local matmul otherwise) as the per-hyperstep BSP program, and C
 blocks written back on the cores' DMA lanes.
 
+The hyperstep loop runs in **compiled mode** (DESIGN.md §5): the whole M³
+walk — including the MOVE seeks — is one ``lax.scan`` dispatch via
+``HyperstepRunner.compile``; the instrumented host loop is run once for the
+best M to show the dispatch-overhead gap.
+
 Prints the Eq. 2 prediction next to the measured time, the paper's §6
 validation. Run: PYTHONPATH=src python examples/bsps_cannon.py [n] [M]
 """
 
 import sys
+import time
 
 import jax
 import numpy as np
 
 from repro.core import plan as planlib
 from repro.core.calibrate import calibrate
-from repro.distributed.cannon import cannon_plan, two_level_cannon
+from repro.distributed.cannon import (
+    cannon_compiled_state,
+    cannon_plan,
+    gather_c,
+    make_cannon_runner,
+)
 
 
 def main() -> None:
@@ -56,8 +67,15 @@ def main() -> None:
     for m_blocks in run_ms:
         if n % (m_blocks * n_grid) != 0:
             continue
-        c, runner = two_level_cannon(a, b, m_blocks, n_grid=n_grid, mesh=mesh,
-                                     machine=acc)
+        # reuse one compiled runner and warm it, so the measured row times
+        # the dispatch, not the one-off XLA trace of the scan
+        runner, outs, _ = make_cannon_runner(a, b, m_blocks, n_grid=n_grid,
+                                             mesh=mesh, machine=acc)
+        state0 = lambda: cannon_compiled_state(n, m_blocks, np.float32)
+        runner.run(state0(), num_hypersteps=m_blocks**3, compiled=True)
+        runner.reset_records()
+        runner.run(state0(), num_hypersteps=m_blocks**3, compiled=True)
+        c = gather_c(outs, n, m_blocks, n_grid)
         err = float(np.abs(c - a @ b).max())
         row = runner.predicted_vs_measured()
         k = n // (m_blocks * n_grid)
@@ -65,8 +83,36 @@ def main() -> None:
               f"measured={row['measured_seconds'] * 1e3:.1f}ms "
               f"predicted={row['predicted_seconds'] * 1e3:.1f}ms "
               f"(x{row['pred_over_meas']:.2f}) "
+              f"[compiled: {m_blocks**3} hypersteps, 1 dispatch] "
               f"bw_heavy pred={row['bandwidth_heavy_predicted']:.0f} "
               f"meas={row['bandwidth_heavy_measured']:.0f}")
+
+    # the dispatch-overhead gap: the same program in both modes, one reused
+    # runner each so the compiled timing excludes the one-off trace
+    valid_ms = [m for m in run_ms if n % (m * n_grid) == 0]
+    if not valid_ms:
+        print(f"  [modes] no M in {run_ms} divides n={n} on the "
+              f"{n_grid}×{n_grid} grid; skipping the mode comparison")
+        return
+    m_cmp = max(valid_ms)
+    runner, outs, _ = make_cannon_runner(a, b, m_cmp, n_grid=n_grid, mesh=mesh,
+                                         machine=acc)
+    state0 = lambda: cannon_compiled_state(n, m_cmp, np.float32)
+    runner.run(state0(), num_hypersteps=m_cmp**3, compiled=True)   # warm up
+    t0 = time.perf_counter()
+    runner.run(state0(), num_hypersteps=m_cmp**3, compiled=True)
+    comp_s = time.perf_counter() - t0
+    h_runner, h_outs, h_state0 = make_cannon_runner(
+        a, b, m_cmp, n_grid=n_grid, mesh=mesh, machine=acc, compiled=False)
+    h_runner.run(h_state0, num_hypersteps=m_cmp**3)     # warm the jitted step
+    t0 = time.perf_counter()
+    h_runner.run(h_state0, num_hypersteps=m_cmp**3)
+    host_s = time.perf_counter() - t0
+    assert float(np.abs(gather_c(outs, n, m_cmp, n_grid)
+                        - gather_c(h_outs, n, m_cmp, n_grid)).max()) < 1e-4
+    print(f"  [modes] M={m_cmp}: host loop {host_s * 1e3:.1f}ms vs "
+          f"compiled {comp_s * 1e3:.1f}ms ({host_s / comp_s:.1f}x, "
+          f"{m_cmp**3 / comp_s:.0f} hypersteps/s)")
 
 
 if __name__ == "__main__":

@@ -19,8 +19,14 @@ from repro.core.cost import (
     cannon_k_equal,
     inner_product_cost,
 )
-from repro.core.hyperstep import HyperstepRecord, HyperstepRunner, run_bsps
+from repro.core.hyperstep import (
+    CompiledHyperstepProgram,
+    HyperstepRecord,
+    HyperstepRunner,
+    run_bsps,
+)
 from repro.core.plan import (
+    CompiledSchedule,
     PlanChoice,
     ScratchSpec,
     StreamPlan,
@@ -37,8 +43,8 @@ __all__ = [
     "HyperstepCost", "SuperstepCost", "bsp_cost", "bsps_cost",
     "cannon_bsp_cost", "cannon_bsps_cost", "cannon_hyperstep", "cannon_k_equal",
     "inner_product_cost",
-    "HyperstepRecord", "HyperstepRunner", "run_bsps",
-    "PlanChoice", "ScratchSpec", "StreamPlan", "TokenSpec",
+    "CompiledHyperstepProgram", "HyperstepRecord", "HyperstepRunner", "run_bsps",
+    "CompiledSchedule", "PlanChoice", "ScratchSpec", "StreamPlan", "TokenSpec",
     "autotune", "enumerate_plans", "host_plan",
     "TPU_V5E", "HardwareSpec", "RooflineReport", "analyze",
     "Stream", "StreamSet",

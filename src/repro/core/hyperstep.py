@@ -50,6 +50,23 @@ row. Give the runner the run's :class:`~repro.core.plan.StreamPlan` (see
 Eq. 1/Eq. 2 used one level down for the Pallas kernels —
 :meth:`HyperstepRunner.predicted_vs_measured` is the predicted/measured table
 row.
+
+Two execution modes (DESIGN.md §5):
+
+* **measure mode** — the instrumented host loop above: one jitted dispatch
+  plus a bulk sync per hyperstep, per-step records. Ground truth for
+  calibration and bottleneck identification, but dispatch overhead dominates
+  short hypersteps.
+* **compiled mode** (``run(state, compiled=True)``) — :meth:`compile` lowers
+  the *whole* hyperstep program into a single donated ``jax.jit``-ed
+  ``lax.scan``: the pseudo-streams are staged once as stacked device views
+  (:meth:`repro.core.stream.Stream.as_stacked`), the cursor walk — prologue
+  residents, per-core rate-k advances, ``on_hyperstep_end`` MOVE/seek
+  schedules, ``out_every``-sparse write-backs — is replayed as precomputed
+  gather/scatter index arrays, and the whole run is one device dispatch.
+  Per-step records collapse into one whole-run row; the word totals still
+  equal the measure-mode sums (the schedule is identical), so
+  :meth:`HyperstepRunner.predicted_vs_measured` stays the Eq. 1 table row.
 """
 
 from __future__ import annotations
@@ -67,7 +84,8 @@ from repro.core.bsp import BSPAccelerator
 from repro.core.plan import StreamPlan
 from repro.core.stream import Stream
 
-__all__ = ["HyperstepRecord", "HyperstepRunner", "run_bsps"]
+__all__ = ["HyperstepRecord", "HyperstepRunner", "CompiledHyperstepProgram",
+           "run_bsps"]
 
 
 @dataclasses.dataclass
@@ -195,6 +213,110 @@ def _writeback(
     return words, time.perf_counter() - t0
 
 
+class _CursorProxy:
+    """Cursor-only stand-in for a stream during :meth:`HyperstepRunner.compile`.
+
+    The compiled schedule is built by replaying the host loop's cursor
+    bookkeeping — prologue, per-hyperstep rate-k advances, and the
+    ``on_hyperstep_end`` seeks (Cannon's ``MOVE`` calls) — against these
+    proxies, so no data moves and the real streams are untouched. An
+    ``on_hyperstep_end`` used with compiled mode must therefore only perform
+    cursor motion (``seek``); side effects that need per-step host control
+    belong in measure mode.
+    """
+
+    def __init__(self, stream: Any) -> None:
+        self.num_tokens = stream.num_tokens
+        self.name = getattr(stream, "name", "")
+        self.stream_id = getattr(stream, "stream_id", 0)
+        self._cursor = stream.cursor
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    def seek(self, core: int, delta_tokens: int) -> None:
+        new = self._cursor + delta_tokens
+        if not 0 <= new <= self.num_tokens:
+            raise IndexError(
+                f"compiled schedule: seek to {new} outside "
+                f"[0, {self.num_tokens}] on {self.name or self.stream_id}")
+        self._cursor = new
+
+    def take(self, n: int) -> int:
+        """Consume n consecutive tokens; returns the start index."""
+        if self._cursor + n > self.num_tokens:
+            raise IndexError(
+                f"compiled schedule: stream {self.name or self.stream_id} "
+                f"exhausted at cursor {self._cursor} (+{n} of "
+                f"{self.num_tokens})")
+        start = self._cursor
+        self._cursor += n
+        return start
+
+
+def _gather_block(stacked: Any, start: Any, rate: int) -> Any:
+    """Device-side ``move_down`` ×rate: slice consecutive tokens off a stacked
+    view and merge them along the token axis (the traced twin of ``_concat``)."""
+
+    def take(leaf: Any) -> Any:
+        sl = jax.lax.dynamic_slice_in_dim(leaf, start, rate, axis=0)
+        if rate == 1:
+            return sl[0]
+        return sl.reshape((rate * leaf.shape[1],) + tuple(leaf.shape[2:]))
+
+    return jax.tree_util.tree_map(take, stacked)
+
+
+def _scatter_block(buf: Any, tok: Any, idx: Any, flag: Any) -> Any:
+    """Device-side ``move_up``: write ``tok`` at token index ``idx`` when
+    ``flag`` (the out_every flush mask) is set, else leave the buffer row."""
+
+    def put(bleaf: Any, tleaf: Any) -> Any:
+        cur = jax.lax.dynamic_slice_in_dim(bleaf, idx, 1, axis=0)
+        new = jnp.where(flag,
+                        jnp.asarray(tleaf).astype(cur.dtype).reshape(cur.shape),
+                        cur)
+        return jax.lax.dynamic_update_slice_in_dim(bleaf, new, idx, axis=0)
+
+    return jax.tree_util.tree_map(put, buf, tok)
+
+
+@dataclasses.dataclass
+class _RunSchedule:
+    """The cursor walk of one compiled run as static (host-built) arrays."""
+
+    total: int
+    gather_indices: np.ndarray      # (H, cores, n_advancing) int32
+    resident_indices: np.ndarray    # (cores, n_slots) int32 (rate-0 rows only)
+    scatter_indices: np.ndarray     # (H, cores, n_out) int32
+    flush_mask: np.ndarray          # (H, n_out) bool
+    step_words: list[int]           # per core, per hyperstep (uniform)
+    initial_words: list[int]        # per core: residents + hyperstep 0 tokens
+    writeback_words: list[int]      # per core, whole run
+    final_in_cursors: list[list[int]]
+    final_out_cursors: list[list[int]]
+
+
+@dataclasses.dataclass
+class CompiledHyperstepProgram:
+    """A whole hyperstep program lowered to one donated jitted ``lax.scan``.
+
+    Built by :meth:`HyperstepRunner.compile`; ``__call__(state, out_bufs,
+    stacked)`` runs ``total`` hypersteps in a single device dispatch and
+    returns ``(state, out_bufs)``. ``schedule`` exposes the precomputed
+    gather/scatter index arrays (tests validate them against
+    :meth:`repro.core.plan.StreamPlan.compiled_schedule`).
+    """
+
+    total: int
+    schedule: _RunSchedule
+    _call: Callable[..., Any]
+
+    def __call__(self, state: Any, out_bufs: Any, stacked: Any) -> Any:
+        return self._call(state, out_bufs, stacked)
+
+
 class HyperstepRunner:
     """Runs a BSPS program: ``state = step(state, tokens)`` per hyperstep.
 
@@ -320,6 +442,11 @@ class HyperstepRunner:
         self.records: list[HyperstepRecord] = []
         self.core_records: list[list[HyperstepRecord]] = [
             [] for _ in self._core_ids]
+        # hypersteps executed so far (host loop: one per record; compiled
+        # mode: the whole run at once) — the measured side's step count for
+        # pro-rata pricing in predicted_seconds()
+        self.hypersteps_run: int = 0
+        self._compiled_cache: dict[int, CompiledHyperstepProgram] = {}
 
     # -- schedule helpers ----------------------------------------------------
 
@@ -393,13 +520,267 @@ class HyperstepRunner:
     def _on_end_arg(self) -> Any:
         return self._streams if self._multi else self._streams[0]
 
-    def run(self, state: Any, num_hypersteps: int | None = None) -> Any:
+    # -- compiled mode -------------------------------------------------------
+
+    def _simulate_schedule(self, total: int) -> _RunSchedule:
+        """Replay the host loop's cursor bookkeeping into static index arrays.
+
+        Mirrors :meth:`run` exactly: prologue (rate-0 residents + hyperstep
+        0's tokens), then per hyperstep the rate-k advances followed by the
+        ``on_hyperstep_end`` seeks — so Cannon's MOVE schedule (and any other
+        cursor program) compiles without the callback knowing about it.
+        """
+        ncores = self.num_cores
+        rates = self._rates
+        adv = [i for i, r in enumerate(rates) if r > 0]
+        n_out = len(self._out_streams[0])
+        proxies = [[_CursorProxy(s) for s in ss] for ss in self._streams]
+        gather = np.zeros((total, ncores, len(adv)), np.int32)
+        resident = np.zeros((ncores, len(rates)), np.int32)
+        initial_words = []
+        for c, (ss, px) in enumerate(zip(self._streams, proxies)):
+            words = 0
+            for i, (s, r) in enumerate(zip(ss, rates)):
+                if r == 0:
+                    resident[c, i] = px[i].take(1)
+                    words += s.token_words
+            for a_j, i in enumerate(adv):
+                gather[0, c, a_j] = px[i].take(rates[i])
+                words += ss[i].token_words * rates[i]
+            initial_words.append(words)
+
+        def on_end(h: int) -> None:
+            if self._on_end is None:
+                return
+            arg = proxies if self._multi else proxies[0]
+            self._on_end(h, arg)
+
+        on_end(0)
+        for h in range(1, total):
+            for c, px in enumerate(proxies):
+                for a_j, i in enumerate(adv):
+                    gather[h, c, a_j] = px[i].take(rates[i])
+            on_end(h)
+
+        out_px = [[_CursorProxy(s) for s in outs] for outs in self._out_streams]
+        scatter = np.zeros((total, ncores, n_out), np.int32)
+        flush = np.zeros((total, n_out), bool)
+        wb_words = [0] * ncores
+        for h in range(total):
+            for j, every in enumerate(self._out_every):
+                if (h + 1) % every != 0:
+                    continue
+                flush[h, j] = True
+                for c in range(ncores):
+                    scatter[h, c, j] = out_px[c][j].take(1)
+                    wb_words[c] += self._out_streams[c][j].token_words
+        step_words = [
+            sum(s.token_words * r for s, r in zip(ss, rates))
+            for ss in self._streams
+        ]
+        return _RunSchedule(
+            total=total,
+            gather_indices=gather,
+            resident_indices=resident,
+            scatter_indices=scatter,
+            flush_mask=flush,
+            step_words=step_words,
+            initial_words=initial_words,
+            writeback_words=wb_words,
+            final_in_cursors=[[p.cursor for p in px] for px in proxies],
+            final_out_cursors=[[p.cursor for p in px] for px in out_px],
+        )
+
+    def compile(self, num_hypersteps: int | None = None, *,
+                donate: bool = True) -> CompiledHyperstepProgram:
+        """Lower the whole hyperstep program to one jitted ``lax.scan``.
+
+        The returned program runs ``total`` hypersteps in a single device
+        dispatch: token fetches become gathers from stacked stream views
+        (static index arrays from :meth:`_simulate_schedule`), write-backs
+        become masked scatters into stacked output buffers, and the step is
+        traced into the scan body — it must be a pure JAX function of
+        ``(state, tokens)`` (host-side effects belong in measure mode), and
+        with out-streams it must return an out token for *every* slot every
+        hyperstep (the flush mask drops the non-completing ones; the
+        conditional ``None`` skip is a host-loop-only contract). ``donate``
+        donates the state and output buffers to the dispatch, so a compiled
+        step may donate its own inputs safely.
+
+        Programs are cached per hyperstep count; ``run(compiled=True)``
+        compiles on first use. Reuse one runner across calls — each new
+        runner re-traces its own program.
+        """
+        for ss in (*self._streams, *self._out_streams):
+            for s in ss:
+                if not hasattr(s, "as_stacked"):
+                    raise TypeError(
+                        f"compiled mode needs array-backed streams with "
+                        f"as_stacked(); {getattr(s, 'name', s)!r} has none "
+                        "(use measure mode for host-I/O streams)")
+        total = self._resolve_total(num_hypersteps)
+        if total <= 0:
+            raise ValueError(f"nothing to compile (total={total})")
+        sched = self._simulate_schedule(total)
+        prog = CompiledHyperstepProgram(
+            total=total, schedule=sched,
+            _call=self._build_program(sched, donate=donate))
+        self._compiled_cache[total] = prog
+        return prog
+
+    def _build_program(self, sched: _RunSchedule, *, donate: bool) -> Callable:
+        ncores = self.num_cores
+        rates = self._rates
+        adv = [i for i, r in enumerate(rates) if r > 0]
+        n_out = len(self._out_streams[0])
+        multi = self._multi
+        step = self._step
+        res_idx = sched.resident_indices
+        xs = {
+            "g": jnp.asarray(sched.gather_indices),
+            "s": jnp.asarray(sched.scatter_indices),
+            "f": jnp.asarray(sched.flush_mask),
+        }
+
+        def program(state: Any, out_bufs: Any, stacked: Any) -> Any:
+            residents = [
+                [None if rates[i] > 0 else jax.tree_util.tree_map(
+                    lambda leaf, c=c, i=i: leaf[res_idx[c, i]], stacked[c][i])
+                 for i in range(len(rates))]
+                for c in range(ncores)
+            ]
+
+            def body(carry: Any, x: Any) -> Any:
+                state, bufs = carry
+                per_core = []
+                for c in range(ncores):
+                    toks, a_j = [], 0
+                    for i, r in enumerate(rates):
+                        if r == 0:
+                            toks.append(residents[c][i])
+                        else:
+                            toks.append(
+                                _gather_block(stacked[c][i], x["g"][c, a_j], r))
+                            a_j += 1
+                    per_core.append(toks)
+                out = step(state, self._step_tokens(per_core))
+                if n_out:
+                    state, out_tokens = out
+                    bufs = [
+                        [_scatter_block(
+                            bufs[c][j],
+                            out_tokens[j][c] if multi else out_tokens[j],
+                            x["s"][c, j], x["f"][j])
+                         for j in range(n_out)]
+                        for c in range(ncores)
+                    ]
+                else:
+                    state = out
+                return (state, bufs), None
+
+            (state, out_bufs), _ = jax.lax.scan(
+                body, (state, out_bufs), xs, length=sched.total)
+            return state, out_bufs
+
+        return jax.jit(program, donate_argnums=(0, 1) if donate else ())
+
+    def _run_compiled(self, state: Any, num_hypersteps: int | None) -> Any:
+        total = self._resolve_total(num_hypersteps)
+        if total <= 0:
+            return state
+        prog = self._compiled_cache.get(total)
+        if prog is None:
+            prog = self.compile(total)
+        sched = prog.schedule
+        for core, ins, outs in zip(self._core_ids, self._streams,
+                                   self._out_streams):
+            for s in [*ins, *outs]:
+                s.open(core)
+        try:
+            # staging: the whole pseudo-stream crosses the external link once
+            # (the compiled twin of the prologue + the per-step prefetches)
+            t0 = time.perf_counter()
+            stacked = [[s.as_stacked() for s in ss] for ss in self._streams]
+            out_bufs = [[s.as_stacked() for s in outs]
+                        for outs in self._out_streams]
+            stacked = _block(stacked)
+            out_bufs = _block(out_bufs)
+            stage_s = time.perf_counter() - t0
+
+            t1 = time.perf_counter()
+            state, out_bufs = prog(state, out_bufs, stacked)
+            state = _block(state)
+            out_bufs = _block(out_bufs)
+            run_s = time.perf_counter() - t1
+
+            # drain the finished output tokens back to external memory and
+            # advance the cursors to the walk's final positions (so adapter
+            # streams — e.g. a data pipeline — see their tokens consumed)
+            t2 = time.perf_counter()
+            for c, (core, outs) in enumerate(zip(self._core_ids,
+                                                 self._out_streams)):
+                for j, s in enumerate(outs):
+                    s.load_stacked(out_bufs[c][j])
+                    s.seek(core, sched.final_out_cursors[c][j] - s.cursor)
+            drain_s = time.perf_counter() - t2
+            for c, (core, ins) in enumerate(zip(self._core_ids, self._streams)):
+                for i, s in enumerate(ins):
+                    s.seek(core, sched.final_in_cursors[c][i] - s.cursor)
+        finally:
+            for core, ins, outs in zip(self._core_ids, self._streams,
+                                       self._out_streams):
+                for s in [*ins, *outs]:
+                    s.close(core)
+
+        # One whole-run record: compute/step = the single dispatch. The
+        # link-busy fields hold the run's *real* external traffic times —
+        # fetch = staging the stacked streams (the whole pseudo-stream
+        # crosses the link once), writeback = draining the output buffers —
+        # so the bandwidth-heavy vote compares measured link time against
+        # measured compute time, same criterion as measure mode at run
+        # granularity. Word totals equal the measure-mode sums (identical
+        # schedule), so predicted_vs_measured stays the Eq. 1 row.
+        for c in range(self.num_cores):
+            self.core_records[c].append(HyperstepRecord(
+                index=0,
+                compute_seconds=run_s,
+                fetch_seconds=stage_s,
+                step_seconds=run_s,
+                fetch_words=sched.step_words[c] * (total - 1),
+                writeback_seconds=drain_s,
+                writeback_words=sched.writeback_words[c],
+                initial_fetch_words=sched.initial_words[c],
+            ))
+        self.records.append(HyperstepRecord(
+            index=0,
+            compute_seconds=run_s,
+            fetch_seconds=stage_s,
+            step_seconds=run_s,
+            fetch_words=max(sched.step_words) * (total - 1),
+            writeback_seconds=drain_s,
+            writeback_words=max(sched.writeback_words),
+            initial_fetch_words=max(sched.initial_words),
+        ))
+        self.hypersteps_run += total
+        return state
+
+    def run(self, state: Any, num_hypersteps: int | None = None, *,
+            compiled: bool = False, measure: bool = True) -> Any:
         """Execute hypersteps until streams are exhausted (or a fixed count).
 
         Callable repeatedly: closing the streams on exit rewinds their
         cursors, so each call replays the program from the start (records
         accumulate across calls).
+
+        ``compiled=True`` runs the whole program as one device dispatch (see
+        :meth:`compile`); ``measure`` applies to the host loop only — when
+        False the per-hyperstep bulk sync no longer forces a device sync, so
+        dispatches pipeline and the per-step compute timings are dispatch
+        times, not device times (records are still appended; use
+        ``measure=True`` when the timings matter).
         """
+        if compiled:
+            return self._run_compiled(state, num_hypersteps)
         ncores = self.num_cores
         # One background lane per core, like the single DMA engine per
         # Epiphany core; per-run so the runner can be reused afterwards.
@@ -483,7 +864,10 @@ class HyperstepRunner:
                     state, out_tokens = out
                 else:
                     state, out_tokens = out, ()
-                state = _block(state)
+                if measure:
+                    # the bulk sync doubles as the timing fence; without
+                    # records the dispatches may pipeline freely
+                    state = _block(state)
                 compute_s = time.perf_counter() - t_c
 
                 wait_s = 0.0
@@ -562,10 +946,13 @@ class HyperstepRunner:
                     initial_fetch_words=(
                         max(w for w, _ in init_stats) if h == 0 else 0),
                 ))
+                self.hypersteps_run += 1
                 if self._on_end and not last:
                     # Cursor adjustments (seek/MOVE) for the *following* fetch.
                     self._on_end(h + 1, self._on_end_arg())
             join_writeback()
+            if not measure:
+                state = _block(state)  # final bulk sync before cursors rewind
             return state
         finally:
             # join any in-flight DMA work *before* closing: close() rewinds
@@ -579,6 +966,18 @@ class HyperstepRunner:
                                        self._out_streams):
                 for s in [*ins, *outs]:
                     s.close(core)
+
+    def reset_records(self) -> None:
+        """Drop accumulated timing state (records persist across run() calls).
+
+        For long-lived runners on a hot path (e.g. one cached decode runner
+        serving many requests) call this before a run to make
+        :meth:`predicted_vs_measured` a per-run row instead of a lifetime
+        aggregate. Compiled programs stay cached — only measurements reset.
+        """
+        self.records = []
+        self.core_records = [[] for _ in self._core_ids]
+        self.hypersteps_run = 0
 
     @property
     def total_seconds(self) -> float:
@@ -604,8 +1003,8 @@ class HyperstepRunner:
         if self.plan is None or self.machine is None:
             return None
         pred = self.plan.predicted_seconds(self.machine)
-        if self.records and len(self.records) != self.plan.num_hypersteps:
-            pred *= len(self.records) / self.plan.num_hypersteps
+        if self.hypersteps_run and self.hypersteps_run != self.plan.num_hypersteps:
+            pred *= self.hypersteps_run / self.plan.num_hypersteps
         return pred
 
     def predicted_vs_measured(self) -> dict[str, float]:
@@ -617,8 +1016,8 @@ class HyperstepRunner:
             raise RuntimeError("construct the runner with plan= and machine=")
         meas = self.total_seconds
         planned_words = self.plan.total_fetch_words()
-        if len(self.records) != self.plan.num_hypersteps:
-            planned_words *= len(self.records) / self.plan.num_hypersteps
+        if self.hypersteps_run != self.plan.num_hypersteps:
+            planned_words *= self.hypersteps_run / self.plan.num_hypersteps
         return {
             "predicted_seconds": pred,
             "measured_seconds": meas,

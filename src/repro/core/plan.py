@@ -38,6 +38,7 @@ operands (rate 0) from streams that consume several tokens per hyperstep.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import time
 from typing import Any, Callable, Iterable, Mapping, Sequence
@@ -52,6 +53,7 @@ __all__ = [
     "TokenSpec",
     "ScratchSpec",
     "StreamPlan",
+    "CompiledSchedule",
     "PlanChoice",
     "host_plan",
     "enumerate_plans",
@@ -135,6 +137,40 @@ class ScratchSpec:
     @property
     def nbytes(self) -> int:
         return int(np.prod(self.shape, dtype=np.int64)) * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSchedule:
+    """A plan's cursor walk as static index arrays (one row per hyperstep).
+
+    The device-side image of :meth:`StreamPlan.fetch_schedule` /
+    :meth:`StreamPlan.writeback_schedule`: everything a compiled hyperstep
+    program (:meth:`repro.core.hyperstep.HyperstepRunner.compile`) needs to
+    replay the whole walk — including ``MOVE``-style reuse, which appears as
+    repeated block coordinates — without any host round-trips. All arrays are
+    in Pallas execution order (last grid axis fastest).
+
+    ``in_blocks[i]``  (H, rank) int32 — input i's block coords at each step.
+    ``in_changed[i]`` (H,) bool — steps whose block differs from the previous
+                      one (the steps the fetch schedule charges ``e·C_i``).
+    ``out_blocks[j]`` (H, rank) int32 — output j's block coords.
+    ``out_completes[j]`` (H,) bool — steps at which the resident output block
+                      is *finished* (the walk moves off it next step, or the
+                      grid ends): the steps a compiled program must write it.
+    ``fetch_words`` / ``writeback_words`` (H,) int64 — the per-step word
+                      charges, identical to the schedule methods' lists.
+    """
+
+    in_blocks: tuple[np.ndarray, ...]
+    in_changed: tuple[np.ndarray, ...]
+    out_blocks: tuple[np.ndarray, ...]
+    out_completes: tuple[np.ndarray, ...]
+    fetch_words: np.ndarray
+    writeback_words: np.ndarray
+
+    @property
+    def num_hypersteps(self) -> int:
+        return len(self.fetch_words)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +299,98 @@ class StreamPlan:
             written[-1] += sum(t.words for t in self.outputs)
         object.__setattr__(self, "_writeback_cache", written)
         return written
+
+    def compiled_schedule(self) -> CompiledSchedule:
+        """The whole cursor walk as static index arrays (compiled-mode input).
+
+        Enumerates the grid once and materialises, per token spec, the block
+        coordinates resident at every hyperstep plus the change/completion
+        masks — ``fetch_schedule``/``writeback_schedule`` and the ``MOVE``
+        seeks they encode, turned into arrays a single ``lax.scan`` dispatch
+        can gather/scatter with. For 1-D (host-level) grids the first
+        coordinate column is directly the stream token index.
+        """
+        if self.num_hypersteps > ENUMERATION_LIMIT:
+            raise ValueError(
+                f"{self.name}: {self.num_hypersteps} hypersteps exceeds the "
+                f"enumeration limit {ENUMERATION_LIMIT}; compiled schedules "
+                "need an enumerable grid")
+        h_total = self.num_hypersteps
+        coords_all = list(itertools.product(*(range(g) for g in self.grid)))
+        in_blocks, in_changed = [], []
+        for tok in self.inputs:
+            blocks = np.asarray([tok.index_map(*c) for c in coords_all],
+                                np.int32).reshape(h_total, -1)
+            changed = np.ones(h_total, bool)
+            changed[1:] = np.any(blocks[1:] != blocks[:-1], axis=1)
+            in_blocks.append(blocks)
+            in_changed.append(changed)
+        out_blocks, out_completes = [], []
+        for tok in self.outputs:
+            blocks = np.asarray([tok.index_map(*c) for c in coords_all],
+                                np.int32).reshape(h_total, -1)
+            completes = np.zeros(h_total, bool)
+            completes[:-1] = np.any(blocks[1:] != blocks[:-1], axis=1)
+            completes[-1] = True
+            out_blocks.append(blocks)
+            out_completes.append(completes)
+        return CompiledSchedule(
+            in_blocks=tuple(in_blocks),
+            in_changed=tuple(in_changed),
+            out_blocks=tuple(out_blocks),
+            out_completes=tuple(out_completes),
+            fetch_words=np.asarray(self.fetch_schedule(), np.int64),
+            writeback_words=np.asarray(self.writeback_schedule(), np.int64),
+        )
+
+    # -- identity ------------------------------------------------------------
+
+    # beyond this many hypersteps the fingerprint samples the index maps on a
+    # bounded, deterministic subset of the grid instead of enumerating it
+    FINGERPRINT_ENUMERATION_LIMIT = 4096
+
+    def _fingerprint_coords(self) -> Iterable[tuple[int, ...]]:
+        h_total = self.num_hypersteps
+        if h_total <= self.FINGERPRINT_ENUMERATION_LIMIT:
+            return itertools.product(*(range(g) for g in self.grid))
+        picks = np.unique(np.linspace(
+            0, h_total - 1, self.FINGERPRINT_ENUMERATION_LIMIT,
+            dtype=np.int64))
+        return (tuple(np.unravel_index(int(i), self.grid)) for i in picks)
+
+    def fingerprint(self) -> str:
+        """Stable identity of the plan's *lowering-relevant* structure.
+
+        Covers name, grid, dimension semantics, every token spec (shape,
+        dtype, full shape, direction, rate), scratch, and a digest of the
+        index maps' behaviour over the grid (enumerated exactly for small
+        grids, sampled deterministically above
+        ``FINGERPRINT_ENUMERATION_LIMIT``) — i.e. everything
+        :func:`repro.kernels.pipeline.lower` reads. Two plans with equal
+        fingerprints lower to the same ``pallas_call``, which is what lets
+        the kernel layer cache lowered calls across plan rebuilds. Does not
+        cover the cost-model fields (flops, comm words): they never reach the
+        lowered kernel.
+        """
+        if getattr(self, "_fingerprint_cache", None) is not None:
+            return self._fingerprint_cache
+        digest = hashlib.sha1()
+
+        def put(*vals: Any) -> None:
+            digest.update(repr(vals).encode())
+
+        put(self.name, self.grid, self.dimension_semantics)
+        for t in (*self.inputs, *self.outputs):
+            put(t.name, t.block_shape, str(jnp.dtype(t.dtype)), t.full_shape,
+                t.direction, t.rate)
+        for s in self.scratch:
+            put(s.name, s.shape, str(jnp.dtype(s.dtype)))
+        for coords in self._fingerprint_coords():
+            for t in (*self.inputs, *self.outputs):
+                put(tuple(t.index_map(*coords)))
+        out = digest.hexdigest()
+        object.__setattr__(self, "_fingerprint_cache", out)
+        return out
 
     def hyperstep_costs(self) -> list[HyperstepCost]:
         """Exact per-hyperstep costs for :func:`repro.core.cost.bsps_cost`.

@@ -167,6 +167,35 @@ class Stream(StreamOwnership):
             raise IndexError(f"seek to {new} outside [0, {self.num_tokens}]")
         self._cursor = new
 
+    # -- compiled-mode views (device-resident stacked tokens) ----------------
+
+    def as_stacked(self) -> Any:
+        """Device-resident view of the whole stream, one token per row.
+
+        Shape ``(num_tokens,) + token_shape``; ``as_stacked()[i]`` equals the
+        token :meth:`move_down` returns at cursor ``i``. This is the external-
+        memory image a compiled hyperstep program
+        (:meth:`repro.core.hyperstep.HyperstepRunner.compile`) gathers from
+        with static index arrays — the whole pseudo-stream staged once, the
+        cursor walk replayed on-device instead of one host dispatch per
+        hyperstep. The view is a snapshot: re-stage after mutating ``data``.
+        """
+        shape = (self.num_tokens, self.token_size) + tuple(self.data.shape[1:])
+        return jnp.asarray(self.data).reshape(shape)
+
+    def load_stacked(self, stacked: Any) -> None:
+        """Write a compiled run's output buffer back into the backing array.
+
+        Inverse of :meth:`as_stacked`: ``stacked`` is ``(num_tokens,) +
+        token_shape`` and replaces the full backing, keeping its array kind
+        (numpy backings stay numpy so host consumers see plain arrays).
+        """
+        flat_shape = self.data.shape
+        if isinstance(self.data, np.ndarray):
+            self.data[...] = np.asarray(stacked).reshape(flat_shape)
+        else:
+            self.data = jnp.asarray(stacked).reshape(flat_shape)
+
     # -- inspection ----------------------------------------------------------
 
     def peek(self, index: int) -> Any:
@@ -275,6 +304,14 @@ class StreamSet:
                 streams.append(
                     self.create(toks, 1, name=f"{name}[{ci},{cj}]"))
         return streams
+
+    def stacked(self) -> list[Any]:
+        """Device-resident stacked views of every stream (creation order).
+
+        One :meth:`Stream.as_stacked` per stream — the external-memory image a
+        compiled hyperstep program gathers from.
+        """
+        return [s.as_stacked() for s in self._streams]
 
     def __getitem__(self, stream_id: int) -> Stream:
         return self._streams[stream_id]

@@ -150,6 +150,27 @@ class BatchStream(StreamOwnership):
         self._stream.seek(self._stream.cursor
                           + delta_tokens * self._stream.cfg.host_count)
 
+    def as_stacked(self) -> dict[str, Any]:
+        """The whole batch window as one stacked pytree (compiled-mode view).
+
+        ``as_stacked()[i]`` leaf-wise equals the *raw* batch ``move_down``
+        would return at local cursor i: batches are generated from the
+        wrapped :class:`TokenStream` without moving its durable cursor —
+        consumption happens when the compiled run seeks this stream past the
+        tokens it gathered, exactly like the host loop's ``move_down`` calls.
+
+        ``put_fn`` is *not* applied: it exists for per-batch device placement
+        (``device_put`` + shard), which the compiled dispatch handles itself
+        when the stacked window becomes a jit argument — running every batch
+        through it here would round-trip host→device→host per batch. A
+        put_fn that transforms batch *values* needs the host loop.
+        """
+        hc = self._stream.cfg.host_count
+        base = self._stream.cursor - self._cursor * hc
+        batches = [self._stream._make(base + i * hc) for i in range(self._num)]
+        return {k: np.stack([np.asarray(b[k]) for b in batches])
+                for k in batches[0]}
+
     # -- plan protocol (host_plan pricing) -----------------------------------
 
     @property

@@ -25,6 +25,7 @@ the cores' DMA lanes.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +44,9 @@ __all__ = [
     "cannon_plan",
     "cannon_streams",
     "make_cannon_step",
+    "make_cannon_step_compiled",
     "cannon_move_schedule",
+    "make_cannon_runner",
     "gather_c",
     "two_level_cannon",
 ]
@@ -268,6 +271,46 @@ def make_cannon_step(m_blocks: int, n_grid: int = 1, *,
     return step
 
 
+def make_cannon_step_compiled(m_blocks: int, n_grid: int = 1, *,
+                              mesh: Mesh | None = None, axis_a: str = "data",
+                              axis_b: str = "model"):
+    """The compiled-mode twin of :func:`make_cannon_step` (pure JAX).
+
+    Traceable into the runner's single ``lax.scan`` dispatch: state is
+    ``(s, acc)`` with ``s`` a traced position counter and ``acc`` a concrete
+    array (no ``None`` sentinel — it is reset with a ``where`` when a new
+    outer product starts), and the per-core C pieces are returned *every*
+    hyperstep; the runner's ``out_every`` flush mask keeps only the ones where
+    the outer product completes. Initial state comes from
+    :func:`cannon_compiled_state`.
+    """
+    if mesh is not None and n_grid > 1:
+        inner = functools.partial(cannon_matmul, mesh=mesh, axis_a=axis_a,
+                                  axis_b=axis_b)
+    else:
+        inner = ops_matmul
+
+    def step(state, toks):
+        s, acc = state
+        a_blk = _assemble_grid(toks[0], n_grid)
+        b_blk = _assemble_grid(toks[1], n_grid)
+        part = inner(a_blk, b_blk).astype(acc.dtype)
+        acc = jnp.where(s == 0, part, acc + part)
+        k = acc.shape[0] // n_grid
+        pieces = [acc[ci * k:(ci + 1) * k, cj * k:(cj + 1) * k]
+                  for ci in range(n_grid) for cj in range(n_grid)]
+        return ((s + 1) % m_blocks, acc), [pieces]
+
+    return step
+
+
+def cannon_compiled_state(n: int, m_blocks: int,
+                          dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """Initial ``(s, acc)`` carry for :func:`make_cannon_step_compiled`."""
+    big = n // m_blocks
+    return jnp.int32(0), jnp.zeros((big, big), dtype)
+
+
 def gather_c(outs: list[list[Stream]], n: int, m_blocks: int,
              n_grid: int = 1) -> np.ndarray:
     """Reassemble C from the per-core write-back streams' backing arrays."""
@@ -284,7 +327,7 @@ def gather_c(outs: list[list[Stream]], n: int, m_blocks: int,
     return c
 
 
-def two_level_cannon(
+def make_cannon_runner(
     a: np.ndarray,
     b: np.ndarray,
     m_blocks: int,
@@ -293,14 +336,15 @@ def two_level_cannon(
     mesh: Mesh | None = None,
     machine=None,
     plan: StreamPlan | None = None,
-) -> tuple[np.ndarray, HyperstepRunner]:
-    """C = A·B per Algorithm 2 on a (simulated) N×N core grid; returns (C, runner).
+    compiled: bool = True,
+) -> tuple[HyperstepRunner, list[list[Stream]], Any]:
+    """Build (but do not run) the Algorithm 2 runner; returns (runner, outs,
+    initial state).
 
-    The full paper construction: an outer hyperstep loop streaming M×M outer
-    blocks (Σ^A re-read M times via ``MOVE``), the inner Cannon as the
-    per-hyperstep BSP program on the core grid, C flushed up once per outer
-    product on the cores' DMA lanes. With ``machine`` given the runner prices
-    the run with Eq. 2 — read ``runner.predicted_vs_measured()`` after.
+    Reusable across runs — repeated ``runner.run(state,
+    num_hypersteps=m_blocks**3, compiled=...)`` calls replay the product (and
+    in compiled mode reuse the one traced program), which is what the
+    dispatch benchmark times.
     """
     n = a.shape[0]
     if a.shape != (n, n) or b.shape != (n, n):
@@ -311,12 +355,18 @@ def two_level_cannon(
         if shape.get("data") != n_grid or shape.get("model") != n_grid:
             raise ValueError(
                 f"mesh shape {shape} does not match the {n_grid}×{n_grid} grid")
+    dtype = jnp.asarray(a[:1, :1]).dtype
     if plan is None:
-        plan = cannon_plan(n, m_blocks, n_grid,
-                           dtype=jnp.asarray(a[:1, :1]).dtype)
+        plan = cannon_plan(n, m_blocks, n_grid, dtype=dtype)
     ins, outs, _ = cannon_streams(np.asarray(a), np.asarray(b), m_blocks, n_grid)
+    if compiled:
+        step = make_cannon_step_compiled(m_blocks, n_grid, mesh=mesh)
+        state0: Any = cannon_compiled_state(n, m_blocks, dtype)
+    else:
+        step = make_cannon_step(m_blocks, n_grid, mesh=mesh)
+        state0 = (0, None)
     runner = HyperstepRunner(
-        make_cannon_step(m_blocks, n_grid, mesh=mesh),
+        step,
         ins,
         cores=n_grid * n_grid,
         out_streams=outs,
@@ -325,7 +375,36 @@ def two_level_cannon(
         plan=plan,
         machine=machine,
     )
+    return runner, outs, state0
+
+
+def two_level_cannon(
+    a: np.ndarray,
+    b: np.ndarray,
+    m_blocks: int,
+    *,
+    n_grid: int = 1,
+    mesh: Mesh | None = None,
+    machine=None,
+    plan: StreamPlan | None = None,
+    compiled: bool = True,
+) -> tuple[np.ndarray, HyperstepRunner]:
+    """C = A·B per Algorithm 2 on a (simulated) N×N core grid; returns (C, runner).
+
+    The full paper construction: an outer hyperstep loop streaming M×M outer
+    blocks (Σ^A re-read M times via ``MOVE``), the inner Cannon as the
+    per-hyperstep BSP program on the core grid, C flushed up once per outer
+    product. By default the whole loop runs as one compiled dispatch
+    (``HyperstepRunner.compile`` — the MOVE schedule becomes static gather
+    indices); pass ``compiled=False`` for the instrumented host loop with
+    per-hyperstep records. With ``machine`` given the runner prices the run
+    with Eq. 2 — read ``runner.predicted_vs_measured()`` after.
+    """
+    n = a.shape[0]
+    runner, outs, state0 = make_cannon_runner(
+        a, b, m_blocks, n_grid=n_grid, mesh=mesh, machine=machine, plan=plan,
+        compiled=compiled)
     # explicit count: the seek-based MOVE reuse means the naive stream budget
     # (M² A tokens) undercounts the M³ hypersteps the walk actually performs
-    runner.run((0, None), num_hypersteps=m_blocks**3)
+    runner.run(state0, num_hypersteps=m_blocks**3, compiled=compiled)
     return gather_c(outs, n, m_blocks, n_grid), runner

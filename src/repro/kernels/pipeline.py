@@ -34,6 +34,7 @@ streamed tokens twice and the planner budgets against it.
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable
 
 import jax
@@ -43,7 +44,50 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 from repro.core.plan import StreamPlan
 
-__all__ = ["lower"]
+__all__ = ["lower", "lower_cache_clear", "lower_cache_info"]
+
+# (plan fingerprint, body key, interpret, compiler kwargs) -> lowered call.
+# Kernels rebuild their StreamPlan (and re-partial their body) on every
+# invocation; without this cache each jit trace re-runs the whole
+# BlockSpec/pallas_call construction per call site.
+_LOWER_CACHE: dict[tuple, Callable[..., Any]] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0, "uncacheable": 0}
+
+
+def _body_key(body: Callable[..., None]) -> Any:
+    """Hashable identity of a kernel body, or None when not cacheable.
+
+    Kernel modules pass ``functools.partial(module_level_fn, **static_kwargs)``
+    — a fresh partial object per call, so the key is the underlying function
+    plus its bound arguments. Only closure-free functions are cacheable: a
+    per-call closure would never hit (each call makes a new function object)
+    yet every insert would pin the closure and its pallas_call forever, so
+    closures — and unhashable bound arguments — return None and skip the
+    cache entirely.
+    """
+    if isinstance(body, functools.partial):
+        fn, args = body.func, body.args
+        kwargs = tuple(sorted(body.keywords.items()))
+    else:
+        fn, args, kwargs = body, (), ()
+    if getattr(fn, "__closure__", None):
+        return None
+    if "<locals>" in getattr(fn, "__qualname__", ""):
+        return None     # defined per call: a fresh object every time
+    try:
+        hash((fn, args, kwargs))
+    except TypeError:
+        return None
+    return (fn, args, kwargs)
+
+
+def lower_cache_clear() -> None:
+    _LOWER_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0, uncacheable=0)
+
+
+def lower_cache_info() -> dict[str, int]:
+    return dict(_CACHE_STATS, size=len(_LOWER_CACHE))
 
 
 def lower(
@@ -59,13 +103,33 @@ def lower(
     one per scratch spec — the standard Pallas kernel signature. Returns the
     callable to apply to the full (external-memory) operands. Plans with a
     single output return a bare array, matching ``pallas_call``.
+
+    Lowered calls are cached keyed by ``(plan.fingerprint(), body, interpret,
+    compiler kwargs)`` — the fingerprint covers everything this function
+    reads from the plan — so re-invoking a kernel with the same shapes stops
+    re-constructing (and re-tracing) the pallas_call.
     """
+    try:
+        key = (plan.fingerprint(), _body_key(body), interpret,
+               tuple(sorted(compiler_kwargs.items())))
+        if key[1] is None:
+            raise TypeError
+        hash(key)
+    except TypeError:
+        key = None
+        _CACHE_STATS["uncacheable"] += 1
+    if key is not None:
+        hit = _LOWER_CACHE.get(key)
+        if hit is not None:
+            _CACHE_STATS["hits"] += 1
+            return hit
+        _CACHE_STATS["misses"] += 1
     in_specs = [pl.BlockSpec(t.block_shape, t.index_map) for t in plan.inputs]
     out_specs = [pl.BlockSpec(t.block_shape, t.index_map) for t in plan.outputs]
     out_shapes = [jax.ShapeDtypeStruct(t.full_shape, t.dtype) for t in plan.outputs]
     if len(plan.outputs) == 1:
         out_specs, out_shapes = out_specs[0], out_shapes[0]
-    return pl.pallas_call(
+    call = pl.pallas_call(
         body,
         grid=plan.grid,
         in_specs=in_specs,
@@ -78,3 +142,6 @@ def lower(
         ),
         interpret=interpret,
     )
+    if key is not None:
+        _LOWER_CACHE[key] = call
+    return call

@@ -9,8 +9,16 @@ generated token is one hyperstep whose jitted step samples from the resident
 logits and advances the model, the KV/state cache is the persistent local
 state (a :class:`~repro.core.plan.ScratchSpec` in the plan), and the sampled
 token ids are written *up* into a backing :class:`~repro.core.stream.Stream`
-on the runner's DMA lane — the serve path's write-back stream. The run is
-priced by :func:`repro.core.plan.host_plan` and reports its
+— the serve path's write-back stream.
+
+By default the whole decode is **one compiled dispatch**: the hyperstep loop
+is lowered by :meth:`HyperstepRunner.compile` into a single jitted
+``lax.scan`` over all generated tokens, killing the dispatch-per-token path
+(the runner — and with it the traced program — is cached per
+``(cfg, temperature, batch, prompt_len, steps)``, so repeated ``generate()``
+calls, the serving hot path, reuse one program). ``compiled=False`` keeps the
+instrumented one-dispatch-per-token loop with per-token timings. Either way
+the run is priced by :func:`repro.core.plan.host_plan` and reports its
 ``predicted_vs_measured()`` row; prefill and decode timings are reported
 separately.
 """
@@ -20,6 +28,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import threading
 import time
 
 import jax
@@ -38,12 +47,22 @@ from repro.train.steps import make_serve_step
 
 @dataclasses.dataclass
 class ServeStats:
-    """Timings + cost-model row for one :func:`generate` call."""
+    """Timings + cost-model row for one :func:`generate` call.
+
+    ``decode_seconds`` is per generated token in measure mode
+    (``compiled=False``); in compiled mode the whole decode is one dispatch,
+    so it holds a single entry — the whole-run decode time.
+    """
 
     prefill_seconds: float
-    decode_seconds: list[float]          # per generated token (compute side)
+    decode_seconds: list[float]
     records: list[HyperstepRecord]
     plan_row: dict[str, float] | None = None
+    compiled: bool = False
+
+    @property
+    def decode_total_seconds(self) -> float:
+        return float(sum(self.decode_seconds))
 
 
 def make_prefill(cfg):
@@ -96,6 +115,53 @@ def compiled_serve_fns(cfg, temperature: float):
     return make_prefill(cfg), decode_fn
 
 
+def _decode_plan(cfg, batch: int, prompt_len: int, steps: int, generated):
+    """Eq. 1 plan for a decode run: generated-id up-stream + cache scratch."""
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, prompt_len + steps))
+    cache_bytes = sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(cache_shapes) if hasattr(x, "shape"))
+    return host_plan(
+        [], out_streams=[generated],
+        # one forward pass per generated token: ~2 FLOPs/param/sequence
+        flops_per_hyperstep=2.0 * M.count_params(cfg) * batch,
+        scratch=(ScratchSpec("cache", (cache_bytes,), jnp.int8),),
+        name=f"serve_{cfg.name}",
+    )
+
+
+@functools.lru_cache(maxsize=8)
+def _decode_runner(cfg, temperature: float, batch: int, prompt_len: int,
+                   steps: int):
+    """One compiled decode runner per request shape (the serving hot path).
+
+    The runner's compiled program scans all ``steps`` decode hypersteps in a
+    single dispatch; caching the runner caches the traced program, so
+    repeated ``generate()`` calls with the same shape re-dispatch without
+    re-tracing. Params ride in the scan carry (a new jit argument each call —
+    weight updates need no recompile) and are *not* donated: the caller keeps
+    owning them across requests. The runner and its ``generated`` backing
+    stream are shared mutable state, so the returned lock serialises
+    concurrent same-shape requests.
+    """
+    _, decode_fn = compiled_serve_fns(cfg, temperature)
+    streams = StreamSet()
+    generated = streams.create(np.zeros((steps, batch), np.int32), 1,
+                               name="generated")
+
+    def hyperstep(state, _tokens):
+        params, logits, cache, key = state
+        tok, logits, cache, key = decode_fn(params, logits, cache, key)
+        return (params, logits, cache, key), [tok[:, 0]]
+
+    runner = HyperstepRunner(
+        hyperstep, [], out_streams=[generated],
+        plan=_decode_plan(cfg, batch, prompt_len, steps, generated))
+    runner.compile(steps, donate=False)
+    return runner, generated, threading.Lock()
+
+
 def generate(
     cfg,
     params,
@@ -105,16 +171,19 @@ def generate(
     temperature: float = 0.0,
     seed: int = 0,
     machine: BSPAccelerator | None = None,
+    compiled: bool = True,
 ) -> tuple[jax.Array, ServeStats]:
-    """Generate ``steps`` tokens after ``prompt_tokens``; returns (tokens, stats)."""
+    """Generate ``steps`` tokens after ``prompt_tokens``; returns (tokens, stats).
+
+    ``compiled=True`` (default) scans the whole decode in one device dispatch;
+    ``compiled=False`` is the instrumented one-dispatch-per-token hyperstep
+    loop with per-token records (calibration/measurement mode).
+    """
     b, s = prompt_tokens.shape
     if s < 1:
         raise ValueError("need a non-empty prompt")
     max_len = s + steps
     cache = M.init_cache(cfg, b, max_len)
-    cache_bytes = sum(
-        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
-        for x in jax.tree_util.tree_leaves(cache) if hasattr(x, "shape"))
 
     # compiled once per (cfg, temperature); repeated generate() calls (the
     # serving hot path) reuse the jitted prefill and decode step
@@ -127,36 +196,50 @@ def generate(
     jax.block_until_ready(logits)
     prefill_s = time.perf_counter() - t0
 
-    # -- decode: one hyperstep per generated token ---------------------------
-    streams = StreamSet()
-    generated = streams.create(np.zeros((steps, b), np.int32), 1, name="generated")
-    plan = host_plan(
-        [], out_streams=[generated],
-        # one forward pass per generated token: ~2 FLOPs/param/sequence
-        flops_per_hyperstep=2.0 * M.count_params(cfg) * b,
-        scratch=(ScratchSpec("cache", (cache_bytes,), jnp.int8),),
-        name=f"serve_{cfg.name}",
-    )
     machine = machine or calibrate(fast=True)
+    key = jax.random.PRNGKey(seed)
 
-    def hyperstep(state, _tokens):
-        logits, cache, key = state
-        tok, logits, cache, key = decode_fn(params, logits, cache, key)
-        # the sampled ids stream up; np.asarray on the DMA lane is the
-        # device->external copy, off the compute path
-        return (logits, cache, key), [tok[:, 0]]
+    if compiled:
+        # -- decode: all hypersteps in one compiled dispatch -----------------
+        runner, generated, lock = _decode_runner(cfg, temperature, b, s, steps)
+        with lock:                      # cached runner + stream are shared
+            runner.machine = machine
+            runner.reset_records()      # per-request row, program stays cached
+            runner.run((params, logits, cache, key), compiled=True)
+            decode_seconds = [runner.records[-1].step_seconds]
+            generated_ids = np.array(generated.data, np.int32)
+            records = list(runner.records)
+            plan_row = runner.predicted_vs_measured()
+    else:
+        # -- decode: one instrumented hyperstep per generated token ----------
+        streams = StreamSet()
+        generated = streams.create(np.zeros((steps, b), np.int32), 1,
+                                   name="generated")
 
-    runner = HyperstepRunner(
-        hyperstep, [], out_streams=[generated], plan=plan, machine=machine)
-    runner.run((logits, cache, jax.random.PRNGKey(seed)))
+        def hyperstep(state, _tokens):
+            logits, cache, key = state
+            tok, logits, cache, key = decode_fn(params, logits, cache, key)
+            # the sampled ids stream up; np.asarray on the DMA lane is the
+            # device->external copy, off the compute path
+            return (logits, cache, key), [tok[:, 0]]
+
+        runner = HyperstepRunner(
+            hyperstep, [], out_streams=[generated],
+            plan=_decode_plan(cfg, b, s, steps, generated), machine=machine)
+        runner.run((logits, cache, key))
+        decode_seconds = [r.compute_seconds for r in runner.records]
+        generated_ids = np.array(generated.data, np.int32)
+        records = list(runner.records)
+        plan_row = runner.predicted_vs_measured()
 
     out = jnp.concatenate(
-        [prompt_tokens, jnp.asarray(generated.data).T.astype(jnp.int32)], axis=1)
+        [prompt_tokens, jnp.asarray(generated_ids).T.astype(jnp.int32)], axis=1)
     stats = ServeStats(
         prefill_seconds=prefill_s,
-        decode_seconds=[r.compute_seconds for r in runner.records],
-        records=runner.records,
-        plan_row=runner.predicted_vs_measured(),
+        decode_seconds=decode_seconds,
+        records=records,
+        plan_row=plan_row,
+        compiled=compiled,
     )
     return out, stats
 
@@ -169,6 +252,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--measure", action="store_true",
+                    help="instrumented per-token decode loop instead of the "
+                         "compiled single-dispatch scan")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -176,13 +262,22 @@ def main() -> None:
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
     tokens, stats = generate(cfg, params, prompt, steps=args.steps,
-                             temperature=args.temperature)
-    p50 = float(np.median(stats.decode_seconds))
-    print(f"[serve] arch={args.arch} batch={args.batch} "
-          f"prefill={stats.prefill_seconds * 1e3:.1f}ms "
-          f"({args.prompt_len} tokens, 1 dispatch) | "
-          f"decode={args.steps} tok/step p50={p50 * 1e3:.1f}ms "
-          f"throughput={args.batch / p50:.1f} tok/s")
+                             temperature=args.temperature,
+                             compiled=not args.measure)
+    if stats.compiled:
+        total = stats.decode_total_seconds
+        print(f"[serve] arch={args.arch} batch={args.batch} "
+              f"prefill={stats.prefill_seconds * 1e3:.1f}ms "
+              f"({args.prompt_len} tokens, 1 dispatch) | "
+              f"decode={args.steps} tok in {total * 1e3:.1f}ms (1 dispatch) "
+              f"throughput={args.steps * args.batch / total:.1f} tok/s")
+    else:
+        p50 = float(np.median(stats.decode_seconds))
+        print(f"[serve] arch={args.arch} batch={args.batch} "
+              f"prefill={stats.prefill_seconds * 1e3:.1f}ms "
+              f"({args.prompt_len} tokens, 1 dispatch) | "
+              f"decode={args.steps} tok/step p50={p50 * 1e3:.1f}ms "
+              f"throughput={args.batch / p50:.1f} tok/s")
     row = stats.plan_row or {}
     if row:
         print(f"[predicted_vs_measured] pred={row['predicted_seconds']:.4g}s "

@@ -6,22 +6,33 @@ executor (and the same Eq. 1 pricing) as every other stream program in the
 repo (DESIGN.md level 2):
 
   down stream   :class:`repro.data.pipeline.BatchStream` — one training batch
-                per token, staged by the runner's DMA lane while the current
-                jitted train step computes
-  up stream     :class:`repro.train.checkpoint.CheckpointStream` — every
-                ``ckpt_every``-th hyperstep's token is a host snapshot, flushed
-                to disk on the DMA lane overlapped with the next step's compute
-  bulk sync     blocking on the new (params, opt_state) before advancing
+                per token
+  up stream     compiled mode: a per-step metrics vector written back into a
+                backing :class:`~repro.core.stream.Stream`; measure mode: a
+                :class:`repro.train.checkpoint.CheckpointStream` — every
+                ``ckpt_every``-th hyperstep's token is a host snapshot,
+                flushed to disk on the DMA lane overlapped with compute
+  bulk sync     compiled mode: the end of the scanned dispatch; measure mode:
+                blocking on the new (params, opt_state) before advancing
 
-The run is priced by :func:`repro.core.plan.host_plan` (the checkpoint stream's
-``t // every`` index map charges one snapshot per interval, Eq. 1's up side)
-and the launcher prints the runner's ``predicted_vs_measured()`` row.
+Two execution modes (DESIGN.md §5). ``TrainConfig.compiled=True`` (default)
+runs each checkpoint interval as **one compiled dispatch**
+(:meth:`HyperstepRunner.compile`): the batch window is staged as a stacked
+device view, the scan carries (params, opt_state), per-step metrics stream up
+into a backing array, and checkpoints are written between dispatches — host
+I/O at segment boundaries instead of a per-step DMA lane. ``compiled=False``
+is the instrumented host loop: per-step records feed the straggler monitor
+and the CheckpointStream overlaps snapshots with compute.
+
+Either way the run is priced by :func:`repro.core.plan.host_plan` and the
+launcher prints the runner's ``predicted_vs_measured()`` row.
 
 Fault tolerance: auto-resume from the latest valid checkpoint (params, opt
 state, *and* the data-stream cursor — restart is a stream ``seek``, computed
 at the hyperstep boundary so prefetch lookahead can't skew it); straggler
 monitor flags steps whose wall time is a >3σ outlier of the EWMA (on real
-fleets this feeds preemption/repair; here it logs and records).
+fleets this feeds preemption/repair; here it logs and records — measure mode
+only, compiled mode has no per-step wall times).
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -37,6 +49,7 @@ from repro.core.bsp import BSPAccelerator
 from repro.core.calibrate import calibrate
 from repro.core.hyperstep import HyperstepRunner
 from repro.core.plan import host_plan
+from repro.core.stream import Stream
 from repro.data.pipeline import BatchStream, DataConfig, TokenStream
 from repro.models import model as M
 from repro.optim.adamw import AdamW
@@ -54,6 +67,10 @@ class TrainConfig:
     log_every: int = 10
     seed: int = 0
     aux_weight: float = 0.01
+    # True: one compiled dispatch per checkpoint interval (production fast
+    # path). False: the instrumented per-step host loop (straggler monitor,
+    # per-step records, checkpoint I/O overlapped on the DMA lane).
+    compiled: bool = True
 
 
 class StragglerMonitor:
@@ -88,6 +105,115 @@ class StragglerMonitor:
 def _state_words(params: Any, opt_state: Any) -> int:
     return sum(int(np.prod(x.shape)) if getattr(x, "shape", ()) else 1
                for x in jax.tree_util.tree_leaves((params, opt_state)))
+
+
+def _aggregate_rows(rows: list[dict[str, float]]) -> dict[str, float]:
+    """Sum per-segment predicted_vs_measured rows into one run-level row."""
+    out = {
+        "predicted_seconds": sum(r["predicted_seconds"] for r in rows),
+        "measured_seconds": sum(r["measured_seconds"] for r in rows),
+        "bandwidth_heavy_predicted": rows[0]["bandwidth_heavy_predicted"],
+        "bandwidth_heavy_measured": max(
+            r["bandwidth_heavy_measured"] for r in rows),
+        "fetch_words_planned": sum(r["fetch_words_planned"] for r in rows),
+        "fetch_words_measured": sum(r["fetch_words_measured"] for r in rows),
+    }
+    out["pred_over_meas"] = (out["predicted_seconds"]
+                             / max(out["measured_seconds"], 1e-12))
+    return out
+
+
+def _train_compiled(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    step_fn: Callable,
+    stream: TokenStream,
+    params: Any,
+    opt_state: Any,
+    start_step: int,
+    history: list,
+    machine: BSPAccelerator,
+    data_cfg: DataConfig,
+    log: Callable[[str], None],
+) -> tuple[Any, Any, dict[str, float]]:
+    """Run training as compiled dispatches, one per checkpoint interval.
+
+    Each segment stages its batch window (:meth:`BatchStream.as_stacked`),
+    scans ``step_fn`` over it in a single donated dispatch with per-step
+    metrics streamed up into a backing array, then (at a checkpoint boundary)
+    writes the snapshot between dispatches. The final-step checkpoint is
+    written by :func:`train`'s closing save, as in measure mode.
+    """
+    # the metric layout is part of the compiled program: probe it abstractly
+    batch_spec = {
+        k: jax.ShapeDtypeStruct((data_cfg.global_batch, data_cfg.seq_len),
+                                jnp.int32)
+        for k in ("tokens", "labels")
+    }
+    _, _, metric_shapes = jax.eval_shape(step_fn, params, opt_state, batch_spec)
+    mkeys = sorted(k for k, v in metric_shapes.items()
+                   if int(np.prod(v.shape, dtype=np.int64)) == 1)
+
+    hyperstep_flops = (6.0 * M.count_params(cfg)
+                       * data_cfg.global_batch * data_cfg.seq_len)
+
+    def hyperstep(state, tokens):
+        params, opt_state = state
+        params, opt_state, metrics = step_fn(params, opt_state, tokens[0])
+        mvec = jnp.stack([metrics[k].astype(jnp.float32).reshape(())
+                          for k in mkeys])
+        return (params, opt_state), [mvec]
+
+    # one runner (= one traced scan program) per segment length: a compiled
+    # run leaves the BatchStream consumed but rewound, so the same streams
+    # serve every equal-length segment without re-tracing
+    runners: dict[int, tuple[HyperstepRunner, Stream]] = {}
+
+    def runner_for(seg: int) -> tuple[HyperstepRunner, Stream]:
+        if seg not in runners:
+            batches = BatchStream(stream, seg)
+            metrics_out = Stream(
+                data=np.zeros((seg, len(mkeys)), np.float32),
+                token_size=1, name="metrics")
+            plan = host_plan(
+                [batches], out_streams=[metrics_out],
+                flops_per_hyperstep=hyperstep_flops, name=f"train_{cfg.name}")
+            runners[seg] = (
+                HyperstepRunner(hyperstep, [batches],
+                                out_streams=[metrics_out],
+                                plan=plan, machine=machine),
+                metrics_out)
+        return runners[seg]
+
+    rows: list[dict[str, float]] = []
+    done = start_step
+    while done < tcfg.steps:
+        seg = tcfg.steps - done
+        if tcfg.ckpt_dir:
+            seg = min(seg, tcfg.ckpt_every - done % tcfg.ckpt_every)
+        runner, metrics_out = runner_for(seg)
+        runner.reset_records()          # per-segment row; program stays cached
+        params, opt_state = runner.run((params, opt_state), compiled=True)
+
+        seg_seconds = runner.records[-1].step_seconds
+        for i in range(seg):
+            entry = {k: float(metrics_out.data[i, j])
+                     for j, k in enumerate(mkeys)}
+            entry["step_seconds"] = seg_seconds / seg   # per-step average
+            step_idx = done + i
+            if step_idx % tcfg.log_every == 0:
+                log(f"[train] step {step_idx} loss {entry['loss']:.4f} "
+                    f"gnorm {entry['grad_norm']:.3f}")
+            history.append(entry)
+        rows.append(runner.predicted_vs_measured())
+        done += seg
+        if tcfg.ckpt_dir and done % tcfg.ckpt_every == 0 and done < tcfg.steps:
+            # segment boundary: checkpoint I/O between dispatches (the run's
+            # final step is saved by train()'s closing blocking save)
+            ckpt.save(tcfg.ckpt_dir, done,
+                      {"params": params, "opt_state": opt_state},
+                      data_state=stream.state_at(done), blocking=True)
+    return params, opt_state, _aggregate_rows(rows)
 
 
 def train(
@@ -131,7 +257,22 @@ def train(
     steps_left = tcfg.steps - start_step
     plan_row: dict[str, float] | None = None
 
-    if steps_left > 0:
+    use_compiled = tcfg.compiled
+    if use_compiled and batch_putter is not None:
+        # compiled mode stages raw batch windows (BatchStream.as_stacked
+        # skips put_fn — placement is the dispatch's job, but a put_fn may
+        # transform values), so a custom putter needs the host loop
+        log("[train] batch_putter set: falling back to the instrumented "
+            "host loop (compiled mode stages raw batches)")
+        use_compiled = False
+
+    if steps_left > 0 and use_compiled:
+        machine = machine or calibrate(fast=True)
+        params, opt_state, plan_row = _train_compiled(
+            cfg, tcfg, step_fn, stream, params, opt_state, start_step,
+            history, machine, data_cfg, log)
+        log("[plan] " + " ".join(f"{k}={v:.4g}" for k, v in plan_row.items()))
+    elif steps_left > 0:
         batches = BatchStream(stream, steps_left, put_fn=batch_putter)
         out_streams: list[Any] = []
         out_every: list[int] = []

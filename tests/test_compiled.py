@@ -1,0 +1,273 @@
+"""Compiled execution mode (ISSUE 4): one dispatch per run, not per hyperstep.
+
+Equivalence of ``run(compiled=True)`` against the instrumented host loop for
+the inner product, rates/residents/out_every programs, two-level Cannon (the
+MOVE schedule as static gather indices), the train step, and serve decode —
+plus donation/replay safety, the plan's ``compiled_schedule`` consistency,
+``fingerprint()`` stability, and the kernel lowering cache.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EPIPHANY_III, HyperstepRunner, StreamSet, host_plan
+from repro.core.plan import CompiledSchedule
+
+ACC = dataclasses.replace(EPIPHANY_III, g=1.0)
+
+
+# ------------------------------------------------------- runner equivalence ----
+
+
+def _inner_product_runner(n=1024, c=128):
+    ss = StreamSet()
+    v = np.arange(n, dtype=np.float32)
+    u = np.full(n, 2.0, np.float32)
+    sv, su = ss.create(v, c), ss.create(u, c)
+    step = lambda acc, t: acc + jnp.vdot(jnp.asarray(t[0]), jnp.asarray(t[1]))
+    return HyperstepRunner(step, [sv, su]), v
+
+
+def test_compiled_inner_product_matches_host_loop():
+    r_host, v = _inner_product_runner()
+    host = float(r_host.run(jnp.float32(0)))
+    r_comp, _ = _inner_product_runner()
+    comp = float(r_comp.run(jnp.float32(0), compiled=True))
+    assert comp == pytest.approx(host)
+    assert comp == pytest.approx(float(v.sum() * 2))
+    # one whole-run record; the hyperstep counter carries the real count
+    assert len(r_comp.records) == 1
+    assert r_comp.hypersteps_run == r_host.hypersteps_run == 8
+
+
+def test_compiled_replay_and_donation_safety():
+    """Two consecutive compiled run() calls agree (donated state and output
+    buffers are re-staged per run; close() rewinds the cursors)."""
+    r, _ = _inner_product_runner()
+    first = float(r.run(jnp.float32(0), compiled=True))
+    second = float(r.run(jnp.float32(0), compiled=True))
+    assert first == second
+    assert r.hypersteps_run == 16
+    assert len(r._compiled_cache) == 1     # one traced program for both runs
+
+
+def _rates_program():
+    """rates=[2, 0] (resident weight) + an out stream flushed every 2 steps."""
+    ss = StreamSet()
+    data = ss.create(np.arange(12, dtype=np.float32), 1)
+    wts = ss.create(np.full(4, 3.0, np.float32), 4)
+    out = ss.create(np.zeros(3, np.float32), 1)
+
+    def step(st, toks):
+        st = st + jnp.sum(jnp.asarray(toks[0])) * jnp.asarray(toks[1])[0]
+        return st, [st.reshape(1)]
+
+    runner = HyperstepRunner(step, [data, wts], rates=[2, 0],
+                             out_streams=[out], out_every=[2])
+    return runner, out
+
+
+def test_compiled_rates_residents_and_sparse_writeback():
+    r_host, out_host = _rates_program()
+    r_host.run(jnp.float32(0))
+    r_comp, out_comp = _rates_program()
+    r_comp.run(jnp.float32(0), compiled=True)
+    np.testing.assert_allclose(np.asarray(out_comp.data),
+                               np.asarray(out_host.data))
+    # whole-run word totals equal the per-step sums of the host loop
+    assert r_comp.total_fetch_words == r_host.total_fetch_words
+    assert (sum(r.writeback_words for r in r_comp.records)
+            == sum(r.writeback_words for r in r_host.records))
+
+
+def test_compiled_row_matches_plan_schedule():
+    ss = StreamSet()
+    data = ss.create(np.zeros(8 * 4, np.float32), 4)
+    weights = ss.create(np.ones(16, np.float32), 16)
+    plan = host_plan([data, weights], rates=[1, 0], flops_per_hyperstep=1.0)
+    runner = HyperstepRunner(
+        lambda st, t: jnp.asarray(t[0]).sum() * 0 + st, [data, weights],
+        rates=[1, 0], plan=plan, machine=ACC)
+    runner.run(jnp.float32(0), compiled=True)
+    row = runner.predicted_vs_measured()
+    assert row["fetch_words_measured"] == row["fetch_words_planned"]
+    assert runner.total_fetch_words == sum(plan.fetch_schedule())
+
+
+def test_host_loop_measure_false_matches_and_skips_sync():
+    r1, _ = _inner_product_runner()
+    r2, _ = _inner_product_runner()
+    a = float(r1.run(jnp.float32(0)))
+    b = float(r2.run(jnp.float32(0), measure=False))
+    assert a == pytest.approx(b)
+    assert len(r2.records) == len(r1.records)   # records still appended
+
+
+def test_compiled_rejects_host_io_streams():
+    from repro.train.checkpoint import CheckpointStream
+    ss = StreamSet()
+    down = ss.create(np.zeros(4, np.float32), 1)
+    ck = CheckpointStream("/tmp/nope", every=1, num_tokens=4, state_words=1)
+    runner = HyperstepRunner(lambda s, t: (s, [None]), [down],
+                             out_streams=[ck])
+    with pytest.raises(TypeError, match="as_stacked"):
+        runner.compile(4)
+
+
+# ------------------------------------------------------------------ cannon ----
+
+
+def test_compiled_cannon_matches_host_and_numpy():
+    from repro.distributed.cannon import two_level_cannon
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    for n_grid, m in ((1, 4), (2, 2)):      # single core and 4 virtual cores
+        c_comp, r_comp = two_level_cannon(a, b, m, n_grid=n_grid, machine=ACC)
+        c_host, r_host = two_level_cannon(a, b, m, n_grid=n_grid, machine=ACC,
+                                          compiled=False)
+        np.testing.assert_allclose(c_comp, c_host, rtol=1e-5, atol=1e-5)
+        assert float(np.abs(c_comp - a @ b).max()) < 1e-3
+        assert r_comp.total_fetch_words == r_host.total_fetch_words
+        row = r_comp.predicted_vs_measured()
+        assert row["fetch_words_measured"] == row["fetch_words_planned"]
+
+
+def test_compiled_gather_indices_match_plan_schedule():
+    """The runner's cursor simulation (MOVE seeks included) agrees with the
+    plan's compiled_schedule: A walks row-major outer blocks (i·M+s), B
+    column-major (j·M+s), C flushes when the (i, j) output block completes."""
+    from repro.distributed.cannon import cannon_plan, make_cannon_runner
+    n, m = 32, 2
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    runner, _, _ = make_cannon_runner(a, b, m, machine=ACC)
+    prog = runner.compile(m**3)
+    sched = cannon_plan(n, m).compiled_schedule()
+    assert isinstance(sched, CompiledSchedule)
+
+    a_blocks, b_blocks = sched.in_blocks
+    a_tokens = a_blocks[:, 0] * m + a_blocks[:, 1]      # Σ^A row-major layout
+    b_tokens = b_blocks[:, 1] * m + b_blocks[:, 0]      # Σ^B col-major layout
+    np.testing.assert_array_equal(prog.schedule.gather_indices[:, 0, 0],
+                                  a_tokens)
+    np.testing.assert_array_equal(prog.schedule.gather_indices[:, 0, 1],
+                                  b_tokens)
+    # C completes once per outer product — the runner's out_every flush mask
+    np.testing.assert_array_equal(prog.schedule.flush_mask[:, 0],
+                                  sched.out_completes[0])
+    c_blocks = sched.out_blocks[0]
+    c_tokens = c_blocks[:, 0] * m + c_blocks[:, 1]
+    flush = sched.out_completes[0]
+    np.testing.assert_array_equal(prog.schedule.scatter_indices[flush, 0, 0],
+                                  c_tokens[flush])
+
+
+# ------------------------------------------------------------- train/serve ----
+
+
+def _tiny_cfg():
+    from repro.configs import get_config
+    return dataclasses.replace(get_config("minicpm-2b", smoke=True),
+                               num_layers=2, dtype="float32")
+
+
+def test_train_compiled_matches_host_loop():
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import AdamW
+    from repro.optim.schedule import constant
+    from repro.train.loop import TrainConfig, train
+
+    cfg = _tiny_cfg()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    opt = AdamW(schedule=constant(1e-3))
+    out_c = train(cfg, TrainConfig(steps=3, log_every=100, compiled=True),
+                  opt, data_cfg=data)
+    out_h = train(cfg, TrainConfig(steps=3, log_every=100, compiled=False),
+                  opt, data_cfg=data)
+    for x, y in zip(jax.tree_util.tree_leaves(out_c["params"]),
+                    jax.tree_util.tree_leaves(out_h["params"])):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+    assert len(out_c["history"]) == len(out_h["history"]) == 3
+    for hc, hh in zip(out_c["history"], out_h["history"]):
+        assert hc["loss"] == pytest.approx(hh["loss"], rel=1e-4)
+    row = out_c["plan_row"]
+    assert row is not None and row["measured_seconds"] > 0
+    assert row["fetch_words_planned"] == row["fetch_words_measured"]
+
+
+def test_serve_decode_compiled_matches_host_loop():
+    from repro.launch.serve import generate
+    from repro.models import model as M
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.zeros((2, 4), jnp.int32)
+    toks_c, stats_c = generate(cfg, params, prompt, steps=6, machine=ACC,
+                               compiled=True)
+    toks_h, stats_h = generate(cfg, params, prompt, steps=6, machine=ACC,
+                               compiled=False)
+    np.testing.assert_array_equal(np.asarray(toks_c), np.asarray(toks_h))
+    assert stats_c.compiled and not stats_h.compiled
+    assert len(stats_c.decode_seconds) == 1     # whole decode, one dispatch
+    assert len(stats_h.decode_seconds) == 6
+    # the cached runner re-dispatches without re-tracing; rows stay per-call
+    toks_c2, stats_c2 = generate(cfg, params, prompt, steps=6, machine=ACC)
+    np.testing.assert_array_equal(np.asarray(toks_c), np.asarray(toks_c2))
+    assert stats_c2.plan_row["measured_seconds"] <= stats_c.plan_row[
+        "measured_seconds"] * 10
+
+
+# ---------------------------------------------- fingerprint + lowering cache ----
+
+
+def test_plan_fingerprint_identity():
+    from repro.kernels.streamed_matmul import matmul_plan
+    p1 = matmul_plan(256, 128, 256, block_m=128, block_n=128, block_k=128)
+    p2 = matmul_plan(256, 128, 256, block_m=128, block_n=128, block_k=128)
+    p3 = matmul_plan(256, 128, 256, block_m=128, block_n=128, block_k=64)
+    assert p1.fingerprint() == p2.fingerprint()
+    assert p1.fingerprint() != p3.fingerprint()
+    # index-map behaviour is part of the identity, not just shapes
+    base = host_plan([_stream(8)], flops_per_hyperstep=1.0)
+    reuse = dataclasses.replace(
+        base, inputs=(dataclasses.replace(
+            base.inputs[0], index_map=lambda t: (t // 2, 0)),))
+    assert base.fingerprint() != reuse.fingerprint()
+
+
+def _stream(n_tokens):
+    return StreamSet().create(np.zeros((n_tokens, 4), np.float32), 1, name="s")
+
+
+def test_lower_cache_reuses_equal_plans():
+    import functools
+
+    from repro.kernels import pipeline
+    from repro.kernels.streamed_matmul import _matmul_kernel, matmul_plan
+
+    pipeline.lower_cache_clear()
+    p1 = matmul_plan(256, 128, 256, block_m=128, block_n=128, block_k=128)
+    p2 = matmul_plan(256, 128, 256, block_m=128, block_n=128, block_k=128)
+    c1 = pipeline.lower(p1, functools.partial(_matmul_kernel, n_k=p1.grid[2]),
+                        interpret=True)
+    c2 = pipeline.lower(p2, functools.partial(_matmul_kernel, n_k=p2.grid[2]),
+                        interpret=True)
+    assert c1 is c2
+    info = pipeline.lower_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1
+    # different static kernel args must not collide
+    c3 = pipeline.lower(p1, functools.partial(_matmul_kernel, n_k=99),
+                        interpret=True)
+    assert c3 is not c1
+    # interpret flag is part of the key
+    c4 = pipeline.lower(p1, functools.partial(_matmul_kernel, n_k=p1.grid[2]),
+                        interpret=False)
+    assert c4 is not c1

@@ -216,7 +216,9 @@ def test_two_level_cannon_single_core_matches_numpy():
     rng = np.random.default_rng(1)
     a = rng.standard_normal((64, 64)).astype(np.float32)
     b = rng.standard_normal((64, 64)).astype(np.float32)
-    c, runner = two_level_cannon(a, b, 4, machine=ACC)
+    # measure mode: this test pins the instrumented per-hyperstep records
+    # (compiled-vs-host equivalence lives in tests/test_compiled.py)
+    c, runner = two_level_cannon(a, b, 4, machine=ACC, compiled=False)
     assert float(np.abs(c - a @ b).max()) < 1e-4
     assert len(runner.records) == 64
     row = runner.predicted_vs_measured()
@@ -231,8 +233,9 @@ def test_two_level_cannon_multicore_matches_references():
     a = rng.standard_normal((n, n)).astype(np.float32)
     b = rng.standard_normal((n, n)).astype(np.float32)
 
-    c_multi, runner = two_level_cannon(a, b, m, n_grid=n_grid, machine=ACC)
-    c_single, _ = two_level_cannon(a, b, m, machine=ACC)
+    c_multi, runner = two_level_cannon(a, b, m, n_grid=n_grid, machine=ACC,
+                                       compiled=False)
+    c_single, _ = two_level_cannon(a, b, m, machine=ACC, compiled=False)
     assert float(np.abs(c_multi - a @ b).max()) < 1e-4
     np.testing.assert_allclose(c_multi, c_single, rtol=1e-5, atol=1e-5)
 
@@ -290,7 +293,9 @@ def test_serve_generate_reuses_compiled_fns():
     assert info.misses == 1
     generate(cfg, params, prompt, steps=2, machine=ACC)
     info = compiled_serve_fns.cache_info()
-    assert info.hits == 1 and info.misses == 1
+    # no rebuild on the second request (the compiled decode runner consults
+    # the same cache, so hits grow — what matters is that misses do not)
+    assert info.misses == 1 and info.hits >= 1
     # the cached pair is literally the same objects
     p1, d1 = compiled_serve_fns(cfg, 0.0)
     p2, d2 = compiled_serve_fns(cfg, 0.0)

@@ -372,7 +372,10 @@ def test_generate_reports_prefill_and_decode_separately():
                               num_layers=2, dtype="float32")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompt = jnp.zeros((2, 4), jnp.int32)
-    tokens, stats = generate(cfg, params, prompt, steps=5, machine=ACC)
+    # measure mode: per-token decode records (compiled decode is covered by
+    # tests/test_compiled.py)
+    tokens, stats = generate(cfg, params, prompt, steps=5, machine=ACC,
+                             compiled=False)
     assert tokens.shape == (2, 9)
     assert stats.prefill_seconds > 0
     assert len(stats.decode_seconds) == 5
