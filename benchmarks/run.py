@@ -8,6 +8,7 @@ Prints ``name,value,derived`` CSV per the repo convention. Modules:
   plan_table       — StreamPlan autotune: Eq. 1 prediction vs measured per block size
   roofline_table   — assignment §Roofline (from recorded dry-run artifacts)
   bsps_bench       — host-loop vs compiled dispatch (writes BENCH_dispatch.json)
+  serve_batch      — continuous-batching serve engine (writes BENCH_serve_batch.json)
 
 Select a subset: ``python -m benchmarks.run cannon_crossover``.
 """
@@ -24,6 +25,7 @@ from benchmarks import (
     mem_speeds,
     plan_table,
     roofline_table,
+    serve_batch,
     transfer_curve,
 )
 
@@ -35,6 +37,7 @@ MODULES = {
     "plan_table": plan_table,
     "roofline_table": roofline_table,
     "bsps_bench": bsps_bench,
+    "serve_batch": serve_batch,
 }
 
 

@@ -14,6 +14,8 @@ is a ~100 ms variant with smaller probes, cheap enough to run at job start.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +25,7 @@ from repro.core.plan import median_seconds
 
 __all__ = [
     "calibrate",
+    "default_machine",
     "measure_flops_rate",
     "measure_external_bandwidth",
     "measure_fetch_model",
@@ -106,3 +109,15 @@ def calibrate(p: int = 1, *, fast: bool = False) -> BSPAccelerator:
         L=(1 << 25) // 4, E=(1 << 34) // 4,  # ~L3-ish local, RAM external
         word_bytes=4, name="container-host",
     )
+
+
+@functools.lru_cache(maxsize=None)
+def default_machine(p: int = 1) -> BSPAccelerator:
+    """The process-wide calibrated machine pack, measured exactly once.
+
+    Hot paths that need a machine but were given none (``generate()``, the
+    serve engine) must use this instead of calling :func:`calibrate` inline —
+    even the ``fast=True`` probe costs ~100 ms of matmul + memcpy timing,
+    which would otherwise be paid per request.
+    """
+    return calibrate(p, fast=True)

@@ -284,7 +284,13 @@ def _scatter_block(buf: Any, tok: Any, idx: Any, flag: Any) -> Any:
 
 @dataclasses.dataclass
 class _RunSchedule:
-    """The cursor walk of one compiled run as static (host-built) arrays."""
+    """The cursor walk of one compiled run as static (host-built) arrays.
+
+    ``start_in_cursors`` / ``start_out_cursors`` pin the cursor positions the
+    walk was simulated from: a cached program is only replayable when the
+    streams stand where the simulation started (see the segment-boundary
+    rejoin check in :meth:`HyperstepRunner._run_compiled`).
+    """
 
     total: int
     gather_indices: np.ndarray      # (H, cores, n_advancing) int32
@@ -296,6 +302,8 @@ class _RunSchedule:
     writeback_words: list[int]      # per core, whole run
     final_in_cursors: list[list[int]]
     final_out_cursors: list[list[int]]
+    start_in_cursors: list[list[int]] = dataclasses.field(default_factory=list)
+    start_out_cursors: list[list[int]] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -534,6 +542,8 @@ class HyperstepRunner:
         rates = self._rates
         adv = [i for i, r in enumerate(rates) if r > 0]
         n_out = len(self._out_streams[0])
+        start_in = [[s.cursor for s in ss] for ss in self._streams]
+        start_out = [[s.cursor for s in outs] for outs in self._out_streams]
         proxies = [[_CursorProxy(s) for s in ss] for ss in self._streams]
         gather = np.zeros((total, ncores, len(adv)), np.int32)
         resident = np.zeros((ncores, len(rates)), np.int32)
@@ -589,7 +599,18 @@ class HyperstepRunner:
             writeback_words=wb_words,
             final_in_cursors=[[p.cursor for p in px] for px in proxies],
             final_out_cursors=[[p.cursor for p in px] for px in out_px],
+            start_in_cursors=start_in,
+            start_out_cursors=start_out,
         )
+
+    def _schedule_current(self, sched: _RunSchedule) -> bool:
+        """True if the streams stand where ``sched``'s cursor walk starts."""
+        if not sched.start_in_cursors and not sched.start_out_cursors:
+            return True     # pre-rejoin schedule without pinned starts
+        return (sched.start_in_cursors
+                == [[s.cursor for s in ss] for ss in self._streams]
+                and sched.start_out_cursors
+                == [[s.cursor for s in outs] for outs in self._out_streams])
 
     def compile(self, num_hypersteps: int | None = None, *,
                 donate: bool = True) -> CompiledHyperstepProgram:
@@ -689,6 +710,14 @@ class HyperstepRunner:
         if total <= 0:
             return state
         prog = self._compiled_cache.get(total)
+        if prog is not None and not self._schedule_current(prog.schedule):
+            # segment-boundary rejoin: the streams stand at a different cursor
+            # position than the cached walk was simulated from (a caller
+            # seeked between runs), so the static gather/scatter arrays are
+            # stale — recompile rather than silently replay the wrong walk.
+            # Segment engines that close/rewind their streams every segment
+            # always pass this check and keep the cached program.
+            prog = None
         if prog is None:
             prog = self.compile(total)
         sched = prog.schedule

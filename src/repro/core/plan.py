@@ -55,7 +55,12 @@ __all__ = [
     "StreamPlan",
     "CompiledSchedule",
     "PlanChoice",
+    "AdmissionDecision",
     "host_plan",
+    "streamed_operand",
+    "batched_scratch",
+    "packed_decode_plan",
+    "admission_decision",
     "enumerate_plans",
     "autotune",
     "median_seconds",
@@ -654,6 +659,189 @@ def host_plan(
         flops_per_hyperstep=flops_per_hyperstep,
         comm_words_per_hyperstep=comm_words_per_hyperstep,
         supersteps_per_hyperstep=supersteps_per_hyperstep,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier pricing: packed decode plans and Eq. 1-priced admission
+# ---------------------------------------------------------------------------
+
+
+def streamed_operand(name: str, words: int, *, dtype: Any = jnp.float32,
+                     direction: str = "down") -> TokenSpec:
+    """A token of ``words`` elements that crosses the link *every* hyperstep.
+
+    The working-set operands of a decode step (the parameters, the growing KV
+    pool) do not fit in local memory, so each hyperstep streams them through
+    the core again — the index map advances every step, which is exactly what
+    the fetch/write-back schedules charge. The degenerate opposite (fetched
+    once) is a rate-0 resident token.
+    """
+    return TokenSpec(
+        name=name,
+        block_shape=(int(words),),
+        index_map=lambda t: (t,),
+        dtype=dtype,
+        full_shape=(int(words),),
+        direction=direction,
+        rate=1,
+    )
+
+
+def batched_scratch(name: str, bytes_per_lane: int, lanes: int,
+                    dtype: Any = jnp.int8) -> ScratchSpec:
+    """Persistent per-lane state of a packed batch as one ScratchSpec.
+
+    The serve engine's paged KV pool is plan scratch — it never moves on the
+    external link as a stream token (decode *reads* of it are priced
+    separately via :func:`streamed_operand`), but it occupies local memory,
+    so :attr:`StreamPlan.vmem_bytes` must budget all ``lanes`` copies.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    if bytes_per_lane % itemsize:
+        raise ValueError(
+            f"bytes_per_lane={bytes_per_lane} not a multiple of "
+            f"{dtype} itemsize {itemsize}")
+    return ScratchSpec(name, (lanes, bytes_per_lane // itemsize), dtype)
+
+
+def packed_decode_plan(
+    *,
+    lanes: int,
+    steps: int,
+    flops_per_token: float,
+    params_words: int,
+    kv_words_per_lane: float,
+    out_words_per_lane: int = 1,
+    scratch: tuple[ScratchSpec, ...] = (),
+    supersteps_per_hyperstep: float = 1.0,
+    name: str = "packed_decode",
+) -> StreamPlan:
+    """Eq. 1 plan for ``steps`` packed decode hypersteps over ``lanes`` lanes.
+
+    One hyperstep = one batched forward pass generating one token per lane.
+    The compute side is ``lanes · flops_per_token`` plus one barrier ``l``
+    per hyperstep (``supersteps_per_hyperstep = 1`` — the dispatch/bulk-sync
+    the BSF line of work shows must be priced for the batching break-even to
+    exist). On the link side the parameters are a *resident* operand — they
+    cross the external link once for the whole segment and are then shared
+    by every lane and every step (the term batching amortises); what streams
+    *every* hyperstep is each lane's KV working set (the term that grows
+    with occupancy and sequence length), plus one generated id per lane
+    written back up.
+
+    This is the plan the serve engine prices *before* admitting a request:
+    compare ``packed_decode_plan(lanes=B)`` against ``lanes=B+1`` with
+    :func:`admission_decision` — the verdict tips bandwidth-heavy exactly
+    when one more lane's per-step KV traffic outweighs the flops it adds.
+    """
+    if lanes <= 0 or steps <= 0:
+        raise ValueError(f"need lanes > 0 and steps > 0, got {lanes}, {steps}")
+    kv_words = int(round(lanes * kv_words_per_lane))
+    inputs = [TokenSpec(
+        name="params",
+        block_shape=(int(params_words),),
+        index_map=lambda t: (0,),
+        dtype=jnp.float32,
+        full_shape=(int(params_words),),
+        direction="down",
+        rate=0,                     # resident: fetched once, reused all segment
+    )]
+    if kv_words > 0:
+        inputs.append(streamed_operand("kv_pool", kv_words))
+    outputs = (TokenSpec(
+        name="generated",
+        block_shape=(1, lanes * out_words_per_lane),
+        index_map=lambda t: (t, 0),
+        dtype=jnp.int32,
+        full_shape=(steps, lanes * out_words_per_lane),
+        direction="up",
+    ),)
+    return StreamPlan(
+        name=name,
+        grid=(steps,),
+        inputs=tuple(inputs),
+        outputs=outputs,
+        scratch=scratch,
+        dimension_semantics=("arbitrary",),
+        flops_per_hyperstep=flops_per_token * lanes,
+        supersteps_per_hyperstep=supersteps_per_hyperstep,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Eq. 1's answer to "does admitting one more stream still pay?".
+
+    ``verdict`` is the candidate plan's side of Eq. 1's ``max``
+    (``"compute_bound"`` or ``"bandwidth_heavy"``); ``admit`` is the policy:
+    admit while the packed step is predicted to *stay* compute-bound — the
+    admission that tips a compute-bound batch bandwidth-heavy is the one
+    deferred (the BSF scalability boundary, applied per admission). A batch
+    that is already bandwidth-heavy (e.g. batch-1 decode, a GEMV streaming
+    the whole weight set) is a different regime: there one more lane
+    amortises the shared link terms, so the policy admits while
+    ``throughput_gain`` — predicted candidate tokens/sec over current —
+    stays above 1.
+    """
+
+    admit: bool
+    verdict: str
+    predicted_step_seconds: float
+    predicted_tokens_per_s: float
+    throughput_gain: float
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def admission_decision(
+    current: StreamPlan | None,
+    candidate: StreamPlan,
+    acc: BSPAccelerator,
+    *,
+    tokens_per_hyperstep: float,
+    current_tokens_per_hyperstep: float | None = None,
+) -> AdmissionDecision:
+    """Price admitting one more stream: compare candidate vs current with Eq. 1.
+
+    ``current=None`` means the engine is idle — an idle engine always admits
+    (there is no throughput to protect), but the verdict is still reported so
+    the caller can see whether even one lane is bandwidth-heavy.
+    """
+    cand_s = candidate.predicted_seconds(acc) / candidate.num_hypersteps
+    cand_tps = tokens_per_hyperstep / max(cand_s, 1e-12)
+    heavy = candidate.bandwidth_heavy(acc)
+    verdict = "bandwidth_heavy" if heavy else "compute_bound"
+    if current is None:
+        return AdmissionDecision(
+            admit=True, verdict=verdict,
+            predicted_step_seconds=cand_s,
+            predicted_tokens_per_s=cand_tps,
+            throughput_gain=float("inf"),
+        )
+    cur_s = current.predicted_seconds(acc) / current.num_hypersteps
+    cur_tokens = (tokens_per_hyperstep - 1.0
+                  if current_tokens_per_hyperstep is None
+                  else current_tokens_per_hyperstep)
+    cur_tps = cur_tokens / max(cur_s, 1e-12)
+    gain = cand_tps / max(cur_tps, 1e-12)
+    if not heavy:
+        admit = True
+    elif current.bandwidth_heavy(acc):
+        # The link is the binding resource even without this request (the
+        # batch-1-GEMV regime): one more lane shares the resident params and
+        # the barrier ``l`` across more tokens, so admit while that pays.
+        admit = gain > 1.0
+    else:
+        # This admission is the one that tips the step bandwidth-heavy.
+        admit = False
+    return AdmissionDecision(
+        admit=admit,
+        verdict=verdict,
+        predicted_step_seconds=cand_s,
+        predicted_tokens_per_s=cand_tps,
+        throughput_gain=gain,
     )
 
 

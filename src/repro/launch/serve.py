@@ -2,8 +2,10 @@
 
 ``python -m repro.launch.serve --arch <id> --smoke --batch 4 --steps 32``
 
-Prefill is one jitted full-sequence pass (a ``lax.scan`` of the decode step
-over the prompt — a single dispatch instead of O(prompt_len) of them), then
+Prefill is one jitted chunked pass (a ``lax.scan`` of the decode step over
+``block``-token chunks of the prompt, block size autotuned under the local
+memory budget by :func:`prefill_block_size` — a single dispatch instead of
+O(prompt_len) of them), then
 decode runs through :class:`repro.core.hyperstep.HyperstepRunner`: each
 generated token is one hyperstep whose jitted step samples from the resident
 logits and advances the model, the KV/state cache is the persistent local
@@ -28,7 +30,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import threading
 import time
 
 import jax
@@ -37,10 +38,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.bsp import BSPAccelerator
-from repro.core.calibrate import calibrate
+from repro.core.calibrate import default_machine
 from repro.core.hyperstep import HyperstepRecord, HyperstepRunner
-from repro.core.plan import ScratchSpec, host_plan
+from repro.core.plan import ScratchSpec, StreamPlan, autotune, host_plan, streamed_operand
 from repro.core.stream import StreamSet
+from repro.launch.registry import Registry
 from repro.models import model as M
 from repro.train.steps import make_serve_step
 
@@ -65,28 +67,95 @@ class ServeStats:
         return float(sum(self.decode_seconds))
 
 
-def make_prefill(cfg):
-    """One jitted full-sequence prefill: prompt -> (last logits, warm cache).
+@functools.lru_cache(maxsize=32)
+def make_prefill(cfg, block: int = 1):
+    """One jitted chunked prefill: prompt -> (last-position logits, warm cache).
 
-    Internally a ``lax.scan`` of the decode step over the prompt positions —
-    identical cache contents to the per-token loop, one XLA dispatch, and it
-    works for every mixer type (attention KV, mamba/xlstm recurrent states).
+    Internally a ``lax.scan`` of the decode step over ``block``-token chunks
+    of the prompt — identical cache contents to the per-token loop, one XLA
+    dispatch, and ``ceil(S / block)`` scan iterations instead of ``S``. A
+    prompt length that is not a multiple of ``block`` pays one leading partial
+    chunk (``S mod block`` tokens) so the scanned chunks stay uniform.
+
+    ``block=1`` (the default) is the original token-at-a-time scan and works
+    for every mixer type; ``block > 1`` needs an attention-only stack (the
+    recurrent mixers consume one token per step — see
+    :func:`repro.models.model.decode_step`). Pick the block with
+    :func:`prefill_block_size`, which autotunes it under the machine's
+    local-memory budget.
     """
     serve_step = make_serve_step(cfg)
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    if block > 1 and any(b.mixer != "attn" for b in cfg.pattern):
+        raise ValueError(
+            f"chunked prefill needs an attention-only stack; {cfg.name} "
+            "has recurrent mixers (use block=1)")
 
     def prefill(params, cache, prompt):          # prompt: (B, S) int32
-        logits, cache = serve_step(params, cache, {"tokens": prompt[:, :1]})
+        b, s = prompt.shape
+        lead = s % block or block                # partial chunk goes first
+        logits, cache = serve_step(params, cache, {"tokens": prompt[:, :lead]})
+        logits = logits[:, -1:]
+        num_chunks = (s - lead) // block
+        if num_chunks:
+            def body(carry, chunk):              # chunk: (block, B) int32
+                cache, _ = carry
+                lg, cache = serve_step(params, cache, {"tokens": chunk.T})
+                return (cache, lg[:, -1:]), None
 
-        def body(carry, tok_t):                  # tok_t: (B,) int32
-            cache, _ = carry
-            logits, cache = serve_step(params, cache, {"tokens": tok_t[:, None]})
-            return (cache, logits), None
-
-        (cache, logits), _ = jax.lax.scan(body, (cache, logits),
-                                          prompt[:, 1:].T)
+            chunks = prompt[:, lead:].T.reshape(num_chunks, block, b)
+            (cache, logits), _ = jax.lax.scan(body, (cache, logits), chunks)
         return logits, cache
 
     return jax.jit(prefill, donate_argnums=(1,))
+
+
+def _prefill_plan(cfg, batch: int, prompt_len: int, block: int) -> StreamPlan:
+    """Eq. 1 plan for a chunked prefill: chunk down-stream + cache scratch."""
+    cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, batch, prompt_len))
+    cache_bytes = sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(cache_shapes) if hasattr(x, "shape"))
+    return StreamPlan(
+        name=f"prefill_{cfg.name}_b{block}",
+        grid=(max(1, -(-prompt_len // block)),),
+        inputs=(streamed_operand("chunk_embeds",
+                                 batch * block * cfg.d_model),),
+        outputs=(),
+        scratch=(ScratchSpec("cache", (cache_bytes,), jnp.int8),),
+        dimension_semantics=("arbitrary",),
+        # one forward over `block` positions: ~2 FLOPs/param/position
+        flops_per_hyperstep=2.0 * M.count_params(cfg) * batch * block,
+        supersteps_per_hyperstep=1.0,  # the per-chunk dispatch barrier —
+        # pricing it is what makes bigger chunks win under Eq. 1
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def prefill_block_size(cfg, batch: int, prompt_len: int,
+                       machine: BSPAccelerator | None = None) -> int:
+    """Autotuned prefill chunk size for a request shape.
+
+    Enumerates power-of-two blocks (plus the whole prompt) and picks the
+    predicted-fastest plan that fits the machine's local memory, double
+    buffers included (:func:`repro.core.plan.autotune`): bigger blocks
+    amortise the per-chunk barrier ``l``, the KV-cache scratch plus the
+    chunk's double-buffered activations cap how big a block fits. Falls back
+    to token-at-a-time when the stack has recurrent mixers or nothing fits.
+    """
+    if prompt_len <= 1 or any(b.mixer != "attn" for b in cfg.pattern):
+        return 1
+    machine = machine or default_machine()
+    blocks = sorted({b for b in (1, 2, 4, 8, 16, 32, 64, 128, prompt_len)
+                     if b <= prompt_len})
+    try:
+        best, _ = autotune(
+            lambda block: _prefill_plan(cfg, batch, prompt_len, block),
+            [{"block": b} for b in blocks], machine)
+    except ValueError:       # not even block=1 fits L: stream token-at-a-time
+        return 1
+    return int(best.params["block"])
 
 
 @functools.lru_cache(maxsize=8)
@@ -115,10 +184,10 @@ def compiled_serve_fns(cfg, temperature: float):
     return make_prefill(cfg), decode_fn
 
 
-def _decode_plan(cfg, batch: int, prompt_len: int, steps: int, generated):
+def _decode_plan(cfg, batch: int, max_len: int, generated):
     """Eq. 1 plan for a decode run: generated-id up-stream + cache scratch."""
     cache_shapes = jax.eval_shape(
-        lambda: M.init_cache(cfg, batch, prompt_len + steps))
+        lambda: M.init_cache(cfg, batch, max_len))
     cache_bytes = sum(
         int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
         for x in jax.tree_util.tree_leaves(cache_shapes) if hasattr(x, "shape"))
@@ -131,9 +200,15 @@ def _decode_plan(cfg, batch: int, prompt_len: int, steps: int, generated):
     )
 
 
-@functools.lru_cache(maxsize=8)
-def _decode_runner(cfg, temperature: float, batch: int, prompt_len: int,
-                   steps: int):
+#: Compiled decode runners keyed by request shape, with refcounted eviction.
+#: A plain ``lru_cache(maxsize=8)`` would evict — and let a duplicate be
+#: rebuilt for — a runner whose lock another thread still holds; the registry
+#: only drops idle entries (see :mod:`repro.launch.registry`).
+decode_runners = Registry(capacity=8)
+
+
+def _build_decode_runner(cfg, temperature: float, batch: int, max_len: int,
+                         steps: int):
     """One compiled decode runner per request shape (the serving hot path).
 
     The runner's compiled program scans all ``steps`` decode hypersteps in a
@@ -142,7 +217,7 @@ def _decode_runner(cfg, temperature: float, batch: int, prompt_len: int,
     re-tracing. Params ride in the scan carry (a new jit argument each call —
     weight updates need no recompile) and are *not* donated: the caller keeps
     owning them across requests. The runner and its ``generated`` backing
-    stream are shared mutable state, so the returned lock serialises
+    stream are shared mutable state; the registry entry's lock serialises
     concurrent same-shape requests.
     """
     _, decode_fn = compiled_serve_fns(cfg, temperature)
@@ -157,9 +232,9 @@ def _decode_runner(cfg, temperature: float, batch: int, prompt_len: int,
 
     runner = HyperstepRunner(
         hyperstep, [], out_streams=[generated],
-        plan=_decode_plan(cfg, batch, prompt_len, steps, generated))
+        plan=_decode_plan(cfg, batch, max_len, generated))
     runner.compile(steps, donate=False)
-    return runner, generated, threading.Lock()
+    return runner, generated
 
 
 def generate(
@@ -172,22 +247,35 @@ def generate(
     seed: int = 0,
     machine: BSPAccelerator | None = None,
     compiled: bool = True,
+    max_len: int | None = None,
+    prefill_block: int | None = None,
 ) -> tuple[jax.Array, ServeStats]:
     """Generate ``steps`` tokens after ``prompt_tokens``; returns (tokens, stats).
 
     ``compiled=True`` (default) scans the whole decode in one device dispatch;
     ``compiled=False`` is the instrumented one-dispatch-per-token hyperstep
-    loop with per-token records (calibration/measurement mode).
+    loop with per-token records (calibration/measurement mode). ``max_len``
+    overrides the cache length (default ``prompt_len + steps``) — e.g. to
+    match the serve engine's pool geometry bit-for-bit. ``prefill_block``
+    overrides the autotuned prefill chunk size (:func:`prefill_block_size`).
     """
     b, s = prompt_tokens.shape
     if s < 1:
         raise ValueError("need a non-empty prompt")
-    max_len = s + steps
+    if max_len is None:
+        max_len = s + steps
+    elif max_len < s + steps:
+        raise ValueError(f"max_len={max_len} < prompt + steps = {s + steps}")
     cache = M.init_cache(cfg, b, max_len)
 
-    # compiled once per (cfg, temperature); repeated generate() calls (the
-    # serving hot path) reuse the jitted prefill and decode step
-    prefill, decode_fn = compiled_serve_fns(cfg, temperature)
+    machine = machine or default_machine()
+
+    # compiled once per (cfg, temperature) / (cfg, block); repeated generate()
+    # calls (the serving hot path) reuse the jitted prefill and decode step
+    if prefill_block is None:
+        prefill_block = prefill_block_size(cfg, b, s, machine)
+    prefill = make_prefill(cfg, prefill_block)
+    _, decode_fn = compiled_serve_fns(cfg, temperature)
 
     # -- prefill: one dispatch over the whole prompt -------------------------
     prompt_tokens = prompt_tokens.astype(jnp.int32)
@@ -196,20 +284,23 @@ def generate(
     jax.block_until_ready(logits)
     prefill_s = time.perf_counter() - t0
 
-    machine = machine or calibrate(fast=True)
     key = jax.random.PRNGKey(seed)
 
     if compiled:
         # -- decode: all hypersteps in one compiled dispatch -----------------
-        runner, generated, lock = _decode_runner(cfg, temperature, b, s, steps)
-        with lock:                      # cached runner + stream are shared
-            runner.machine = machine
-            runner.reset_records()      # per-request row, program stays cached
-            runner.run((params, logits, cache, key), compiled=True)
-            decode_seconds = [runner.records[-1].step_seconds]
-            generated_ids = np.array(generated.data, np.int32)
-            records = list(runner.records)
-            plan_row = runner.predicted_vs_measured()
+        with decode_runners.acquire(
+                (cfg, temperature, b, max_len, steps),
+                lambda: _build_decode_runner(cfg, temperature, b, max_len,
+                                             steps)) as entry:
+            runner, generated = entry.value
+            with entry.lock:            # cached runner + stream are shared
+                runner.machine = machine
+                runner.reset_records()  # per-request row, program stays cached
+                runner.run((params, logits, cache, key), compiled=True)
+                decode_seconds = [runner.records[-1].step_seconds]
+                generated_ids = np.array(generated.data, np.int32)
+                records = list(runner.records)
+                plan_row = runner.predicted_vs_measured()
     else:
         # -- decode: one instrumented hyperstep per generated token ----------
         streams = StreamSet()
@@ -225,7 +316,7 @@ def generate(
 
         runner = HyperstepRunner(
             hyperstep, [], out_streams=[generated],
-            plan=_decode_plan(cfg, b, s, steps, generated), machine=machine)
+            plan=_decode_plan(cfg, b, max_len, generated), machine=machine)
         runner.run((logits, cache, key))
         decode_seconds = [r.compute_seconds for r in runner.records]
         generated_ids = np.array(generated.data, np.int32)

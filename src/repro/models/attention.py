@@ -104,9 +104,14 @@ def blockwise_attention(
         mask = jnp.ones((sq, bk), bool)
         if causal:
             mask &= q_pos[:, None] >= k_pos[None, :]
+        mask = mask[None]                      # (1|B, sq, bk)
         if kv_valid_len is not None:
-            mask &= (k_pos < kv_valid_len)[None, :]
-        s_ = jnp.where(mask[None, None, None], s_, _NEG)
+            valid = jnp.asarray(kv_valid_len)
+            if valid.ndim == 1:                # per-lane valid lengths
+                mask = mask & (k_pos[None, None, :] < valid[:, None, None])
+            else:
+                mask = mask & (k_pos < valid)[None, None, :]
+        s_ = jnp.where(mask[:, None, None], s_, _NEG)
         m_cur = jnp.max(s_, axis=-1)
         m_new = jnp.maximum(m, m_cur)
         p_ = jnp.exp(s_ - m_new[..., None])
@@ -146,6 +151,10 @@ def dense_cache_attention(
     transposed cache views per chunk (measured 64× cache traffic per layer in
     the dry-run; EXPERIMENTS.md §Perf cell C). One masked dense pass is the
     memory-optimal schedule and shards cleanly over batch/head/sequence.
+
+    ``kv_valid_len`` may be a scalar (every lane at the same position — the
+    single-request serve path) or a ``(B,)`` vector (a packed continuous batch
+    of requests at mixed positions — the serve engine's padding mask).
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
@@ -153,10 +162,16 @@ def dense_cache_attention(
     qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * d ** -0.5
     k_pos = jnp.arange(skv)
-    mask = k_pos[None, :] < kv_valid_len
+    kv_valid_len = jnp.asarray(kv_valid_len)
+    if kv_valid_len.ndim == 1:                 # per-lane valid lengths
+        mask = k_pos[None, None, :] < kv_valid_len[:, None, None]  # (B, 1, Skv)
+    else:
+        mask = (k_pos[None, :] < kv_valid_len)[None]               # (1, ?, Skv)
     if sq > 1:
-        mask = mask & ((jnp.arange(sq) + q_offset)[:, None] >= k_pos[None, :])
-    s = jnp.where(mask[None, None, None], s, _NEG)
+        causal = (jnp.arange(sq) + q_offset)[:, None] >= k_pos[None, :]
+        mask = mask & causal[None]
+    mask = jnp.broadcast_to(mask, (b, sq, skv))
+    s = jnp.where(mask[:, None, None], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return out.reshape(b, hq, sq, d).astype(q.dtype)
@@ -227,33 +242,64 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
 def attention_decode(
     cfg: ModelConfig,
     p: Params,
-    x: jax.Array,            # (B, 1, d)
+    x: jax.Array,            # (B, S, d) — S = 1 (decode) or a prefill chunk
     cache: Params,
-    cache_len: jax.Array,    # scalar int32: tokens already in cache
+    cache_len: jax.Array,    # scalar int32, or (B,) int32 for packed lanes
     *,
     impl: str = "auto",
     unroll_time: bool = False,
 ) -> tuple[jax.Array, Params]:
-    """One decode step: append k/v at ``cache_len``, attend over the cache."""
-    b = x.shape[0]
-    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    """One decode step: append k/v at ``cache_len``, attend over the cache.
+
+    Two generalisations of the classic single-token step share this path:
+
+    * **chunked prefill** — ``x`` carries S > 1 prompt tokens at once (scalar
+      ``cache_len``); the chunk attends causally within itself plus over the
+      cache, and all S k/v rows land in one ``dynamic_update_slice``.
+    * **packed lanes** — ``cache_len`` is a ``(B,)`` vector: each lane of a
+      continuous batch sits at its own position (mixed prompt lengths), with
+      per-lane RoPE positions, per-lane cache writes, and per-lane validity
+      masks. Vector lengths require S = 1 (the serve engine's decode shape).
+    """
+    b, s, _ = x.shape
+    cache_len = jnp.asarray(cache_len)
+    per_lane = cache_len.ndim == 1
+    if per_lane and s != 1:
+        raise ValueError("per-lane cache_len requires single-token steps")
+    if per_lane:
+        positions = cache_len.astype(jnp.int32)[:, None]          # (B, 1)
+    else:
+        positions = jnp.broadcast_to(
+            (cache_len + jnp.arange(s)).astype(jnp.int32)[None], (b, s))
     if cfg.rope_type == "mrope":
-        positions = jnp.broadcast_to(positions, (3, b, 1))
+        positions = jnp.broadcast_to(positions, (3, b, s))
     q, k, v = _project_qkv(cfg, p, x, positions)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, cache_len, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, cache_len, 0, 0))
+    if per_lane:
+        ck = jax.vmap(
+            lambda c, upd, ln: jax.lax.dynamic_update_slice(
+                c, upd.astype(c.dtype), (ln, 0, 0))
+        )(cache["k"], k, cache_len)
+        cv = jax.vmap(
+            lambda c, upd, ln: jax.lax.dynamic_update_slice(
+                c, upd.astype(c.dtype), (ln, 0, 0))
+        )(cache["v"], v, cache_len)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
     if impl == "auto":
         impl = os.environ.get("REPRO_DECODE_ATTN", "dense")
     if impl == "dense":
         out = dense_cache_attention(
             q.swapaxes(1, 2), ck.swapaxes(1, 2), cv.swapaxes(1, 2),
-            kv_valid_len=cache_len + 1).swapaxes(1, 2)
+            kv_valid_len=cache_len + s,
+            q_offset=cache_len if not per_lane else 0).swapaxes(1, 2)
     else:
         out = attention_core(
-            cfg, q, ck, cv, causal=False, kv_valid_len=cache_len + 1,
+            cfg, q, ck, cv, causal=s > 1, kv_valid_len=cache_len + s,
+            q_offset=cache_len if not per_lane else 0,
             impl=impl, unroll_time=unroll_time,
         )
-    y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
     return y, {"k": ck, "v": cv}

@@ -134,27 +134,43 @@ def decode_step(
     cfg: ModelConfig,
     params: Params,
     cache: Params,
-    tokens: jax.Array | None = None,     # (B, 1) int32
+    tokens: jax.Array | None = None,     # (B, S) int32 — S=1 or a prefill chunk
     *,
-    embeds: jax.Array | None = None,     # (B, 1, d) for vlm/audio stubs
+    embeds: jax.Array | None = None,     # (B, S, d) for vlm/audio stubs
     unroll_time: bool = False,
 ) -> tuple[jax.Array, Params]:
-    """One serve step: logits for the next token + updated cache."""
+    """One serve step: logits for the next token(s) + updated cache.
+
+    ``tokens`` may carry S > 1 positions at once (chunked prefill — attention
+    archs only, the recurrent mixers consume one token per step), and
+    ``cache["len"]`` may be a ``(B,)`` vector for a packed continuous batch of
+    lanes at mixed positions (see :func:`repro.models.attention.attention_decode`).
+    """
     if (tokens is None) == (embeds is None):
         raise ValueError("pass exactly one of tokens / embeds")
     if embeds is None:
         x = embed_tokens(params["embed"], tokens)
     else:
         x = embeds.astype(_dtype(cfg))
+    s = x.shape[1]
+    cache_len = cache["len"]
+    if s > 1 and any(b.mixer != "attn" for b in cfg.pattern):
+        raise ValueError(
+            "multi-token decode chunks need an attention-only stack; "
+            f"{cfg.name} has recurrent mixers")
     if cfg.rope_type == "sinusoidal":
-        pos = jnp.broadcast_to(cache["len"][None, None], (x.shape[0], 1))
+        if jnp.asarray(cache_len).ndim == 1:
+            pos = cache_len[:, None] + jnp.arange(s)[None]
+        else:
+            pos = jnp.broadcast_to(
+                (cache_len + jnp.arange(s))[None], (x.shape[0], s))
         x = x + sinusoidal_positions(cfg.d_model, pos).astype(x.dtype)
     x, new_layers = tf.apply_stack_decode(
-        cfg, params["stack"], cache["layers"], x, cache["len"],
+        cfg, params["stack"], cache["layers"], x, cache_len,
         unroll_time=unroll_time,
     )
     x = apply_norm(cfg, params["final_norm"], x)
     logits = lm_head(cfg, params["embed"], x)
     if cfg.padded_vocab != cfg.vocab_size:
         logits = logits[..., : cfg.vocab_size]
-    return logits, {"layers": new_layers, "len": cache["len"] + 1}
+    return logits, {"layers": new_layers, "len": cache_len + s}
