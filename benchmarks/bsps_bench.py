@@ -121,13 +121,18 @@ def _case_serve_decode(smoke: bool, acc) -> dict:
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompt = jnp.zeros((batch, prompt_len), jnp.int32)
 
+    last_stats: dict[bool, object] = {}
+
     def decode_time(compiled: bool) -> float:
         _, stats = generate(cfg, params, prompt, steps=steps, machine=acc,
                             compiled=compiled)
+        last_stats[compiled] = stats
         return stats.decode_total_seconds
 
     comp_s = median_seconds(lambda: decode_time(True))
     host_s = median_seconds(lambda: decode_time(False))
+    # the last (warm) call's Eq. 1 row per mode — same protocol as the other
+    # cases, so BENCH_dispatch.json carries pred_over_meas for all three
     return {
         "hypersteps": steps,
         "host_seconds": host_s,
@@ -135,6 +140,10 @@ def _case_serve_decode(smoke: bool, acc) -> dict:
         "host_steps_per_s": steps / host_s,
         "compiled_steps_per_s": steps / comp_s,
         "speedup": host_s / comp_s,
+        "host_pred_over_meas":
+            last_stats[False].plan_row["pred_over_meas"],
+        "compiled_pred_over_meas":
+            last_stats[True].plan_row["pred_over_meas"],
     }
 
 

@@ -9,6 +9,8 @@ Prints ``name,value,derived`` CSV per the repo convention. Modules:
   roofline_table   — assignment §Roofline (from recorded dry-run artifacts)
   bsps_bench       — host-loop vs compiled dispatch (writes BENCH_dispatch.json)
   serve_batch      — continuous-batching serve engine (writes BENCH_serve_batch.json)
+  multihost        — third pricing level: per-level rows + scalability curves
+                     (writes BENCH_multihost.json; needs >= 8 forced devices)
 
 Select a subset: ``python -m benchmarks.run cannon_crossover``.
 """
@@ -23,6 +25,7 @@ from benchmarks import (
     cannon_crossover,
     inner_product,
     mem_speeds,
+    multihost,
     plan_table,
     roofline_table,
     serve_batch,
@@ -38,6 +41,7 @@ MODULES = {
     "roofline_table": roofline_table,
     "bsps_bench": bsps_bench,
     "serve_batch": serve_batch,
+    "multihost": multihost,
 }
 
 

@@ -70,11 +70,24 @@ class BSPAccelerator(BSPComputer):
         buffering) halves the *effective* local memory — see
         :meth:`effective_local_words`.
     E : external memory pool size, in words.
+
+    The optional third pricing level (DESIGN.md §8) views a *mesh of hosts*,
+    each running the whole device hyperstep program, as one more BSP machine
+    wrapped around it: ``hosts`` machines exchanging ``h_host`` words per
+    host-level superstep at ``g_host`` FLOPs/word with barrier cost ``l_host``
+    FLOPs. The superstep term ``g·h + l`` is applied recursively — a
+    host-level hyperstep costs ``T_device + g_host·h_host + l_host·s_host``
+    with ``T_device`` the already-composed Eq. 2 device term. Defaults
+    (``hosts=1``, ``g_host=l_host=0``) make single-host plans price exactly
+    as before.
     """
 
     e: float = 0.0
     L: int = 0
     E: int = 0
+    hosts: int = 1
+    g_host: float = 0.0
+    l_host: float = 0.0
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -84,6 +97,10 @@ class BSPAccelerator(BSPComputer):
             raise ValueError("L and E must be positive (words)")
         if self.E < self.L:
             raise ValueError("external memory E must be >= local memory L")
+        if self.hosts <= 0:
+            raise ValueError(f"hosts must be positive, got {self.hosts}")
+        if self.g_host < 0 or self.l_host < 0:
+            raise ValueError("g_host and l_host must be >= 0")
 
     # -- derived quantities -------------------------------------------------
 

@@ -25,10 +25,12 @@ from repro.core.plan import median_seconds
 
 __all__ = [
     "calibrate",
+    "calibrate_host_level",
     "default_machine",
     "measure_flops_rate",
     "measure_external_bandwidth",
     "measure_fetch_model",
+    "measure_host_superstep",
     "measure_hyperstep_latency",
 ]
 
@@ -108,6 +110,64 @@ def calibrate(p: int = 1, *, fast: bool = False) -> BSPAccelerator:
         p=p, g=0.0, l=l, r=r, e=e,
         L=(1 << 25) // 4, E=(1 << 34) // 4,  # ~L3-ish local, RAM external
         word_bytes=4, name="container-host",
+    )
+
+
+def measure_host_superstep(mesh, axis: str = "host") -> tuple[float, float]:
+    """Two-point fit of the host-level superstep term over real collectives.
+
+    Times an all-reduce (``psum``) across the mesh's ``axis`` at two payload
+    sizes and fits ``t(h) = l_sec + h · g_sec_per_word`` — the same two-point
+    protocol as :func:`measure_fetch_model`, one level up: the collective IS
+    the host-level h-relation, so its slope is ``g_host`` (seconds/word,
+    whatever ring/tree factor the runtime uses is absorbed into it) and its
+    intercept the host barrier ``l_host``. Returns
+    ``(g_host_seconds_per_word, l_host_seconds)``.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    n = int(mesh.shape[axis])
+    if n <= 1:
+        return 0.0, 0.0
+    w1, w2 = 1 << 12, 1 << 18  # words per host-shard
+
+    def timed_psum(words: int) -> float:
+        x = jnp.zeros((n * words,), jnp.float32)
+        x = jax.device_put(x, NamedSharding(mesh, P((axis,))))
+        f = jax.jit(shard_map(
+            lambda v: jax.lax.psum(v, axis),
+            mesh=mesh, in_specs=P((axis,)), out_specs=P(None),
+            check_rep=False))
+        return _time(lambda: jax.block_until_ready(f(x)), repeats=7)
+
+    t1, t2 = timed_psum(w1), timed_psum(w2)
+    g_sec = max(t2 - t1, 0.0) / (w2 - w1)
+    l_sec = max(t1 - w1 * g_sec, 0.0)
+    return g_sec, l_sec
+
+
+def calibrate_host_level(acc: BSPAccelerator, mesh, axis: str = "host") -> BSPAccelerator:
+    """Extend a calibrated device pack with the third pricing level.
+
+    Measures ``(g_host, l_host)`` over real collectives on ``mesh``'s host
+    axis (:func:`measure_host_superstep`) and returns the pack with
+    ``hosts``/``g_host``/``l_host`` filled in — in FLOP units of the pack's
+    own ``r``, like every other parameter, so
+    ``HyperstepCost.cost = T_device + g_host·h_host + l_host·s_host``
+    converts to wall time with the one ``flops_to_seconds``.
+    """
+    import dataclasses
+    if axis not in mesh.axis_names:
+        return dataclasses.replace(acc, hosts=1, g_host=0.0, l_host=0.0)
+    g_sec, l_sec = measure_host_superstep(mesh, axis)
+    return dataclasses.replace(
+        acc,
+        hosts=int(mesh.shape[axis]),
+        g_host=g_sec * acc.r,
+        l_host=l_sec * acc.r,
     )
 
 

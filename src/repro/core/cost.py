@@ -72,6 +72,16 @@ class HyperstepCost:
     hyperstep degenerates to the single-core pure-compute case. Two-level
     Cannon (paper Eq. 2) is one hyperstep with ``bsp_flops = N·2k³``,
     ``comm_words = N·2k²``, ``supersteps = N`` and ``fetch_words = [2k²]·p``.
+
+    The *host* level (DESIGN.md §8) applies the superstep term once more,
+    recursively: ``host_comm_words`` is the host-level h-relation (max words
+    any one host exchanges with the others during this hyperstep — FSDP
+    all-gathers, gradient reduce-scatters, Cannon block rotations between
+    hosts) and ``host_supersteps`` the number of host-level barriers. They
+    are priced with the *outer* pair ``(g_host, l_host)`` and added on top
+    of the device-level max — the device term T_device is itself the inner
+    program a host-level superstep runs, so the recursion is
+    ``T_host = T_device + g_host·h_host + l_host·s_host``.
     """
 
     bsp_flops: float
@@ -79,6 +89,8 @@ class HyperstepCost:
     writeback_words: Sequence[float] = ()
     comm_words: float = 0.0
     supersteps: float = 0.0
+    host_comm_words: float = 0.0
+    host_supersteps: float = 0.0
 
     def compute_cost(self, machine: BSPComputer) -> float:
         """The inner BSP program's cost: Σ_i (max_s w_i(s) + g·h_i + l)."""
@@ -105,8 +117,18 @@ class HyperstepCost:
         ww += [0.0] * (n - len(ww))
         return acc.e * max(f + w for f, w in zip(fw, ww))
 
-    def cost(self, acc: BSPAccelerator) -> float:
+    def host_cost(self, acc: BSPAccelerator) -> float:
+        """The outer superstep term ``g_host·h_host + l_host·s_host``."""
+        return (acc.g_host * self.host_comm_words
+                + acc.l_host * self.host_supersteps)
+
+    def device_cost(self, acc: BSPAccelerator) -> float:
+        """T_device: the Eq. 1 max over compute and link, no host term."""
         return max(self.compute_cost(acc), self.link_cost(acc))
+
+    def cost(self, acc: BSPAccelerator) -> float:
+        """Full recursive cost: T_device + g_host·h_host + l_host·s_host."""
+        return self.device_cost(acc) + self.host_cost(acc)
 
     def bandwidth_heavy(self, acc: BSPAccelerator) -> bool:
         """True if moving tokens (either direction) dominates (paper §2)."""

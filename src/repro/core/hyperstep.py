@@ -454,6 +454,11 @@ class HyperstepRunner:
         # mode: the whole run at once) — the measured side's step count for
         # pro-rata pricing in predicted_seconds()
         self.hypersteps_run: int = 0
+        # device dispatches issued: the host loop pays one jit dispatch +
+        # bulk sync per hyperstep, a compiled run one per segment — the
+        # execution mode's own barrier count, priced at the machine's l
+        # (which calibrate() measures as exactly that per-dispatch latency)
+        self.dispatches_run: int = 0
         self._compiled_cache: dict[int, CompiledHyperstepProgram] = {}
 
     # -- schedule helpers ----------------------------------------------------
@@ -791,6 +796,7 @@ class HyperstepRunner:
             initial_fetch_words=max(sched.initial_words),
         ))
         self.hypersteps_run += total
+        self.dispatches_run += 1
         return state
 
     def run(self, state: Any, num_hypersteps: int | None = None, *,
@@ -976,6 +982,7 @@ class HyperstepRunner:
                         max(w for w, _ in init_stats) if h == 0 else 0),
                 ))
                 self.hypersteps_run += 1
+                self.dispatches_run += 1
                 if self._on_end and not last:
                     # Cursor adjustments (seek/MOVE) for the *following* fetch.
                     self._on_end(h + 1, self._on_end_arg())
@@ -1007,6 +1014,7 @@ class HyperstepRunner:
         self.records = []
         self.core_records = [[] for _ in self._core_ids]
         self.hypersteps_run = 0
+        self.dispatches_run = 0
 
     @property
     def total_seconds(self) -> float:
@@ -1028,12 +1036,23 @@ class HyperstepRunner:
 
         After :meth:`run`, a ``num_hypersteps`` override shorter than the plan
         is priced pro rata so prediction and measurement cover the same steps.
+
+        The plan prices the *program*; the execution mode adds its own
+        barriers on top — one jit dispatch + bulk sync per host-loop
+        hyperstep, one per compiled segment — charged here at the machine's
+        ``l`` (the calibrated per-dispatch latency). This is what makes the
+        host-loop and compiled rows of the same program comparable: without
+        it a short-hyperstep host loop is underpredicted by orders of
+        magnitude (the SpMV example pays ~ms of dispatch per ~µs hyperstep)
+        while the compiled dispatch amortises one ``l`` over the whole run.
         """
         if self.plan is None or self.machine is None:
             return None
         pred = self.plan.predicted_seconds(self.machine)
         if self.hypersteps_run and self.hypersteps_run != self.plan.num_hypersteps:
             pred *= self.hypersteps_run / self.plan.num_hypersteps
+        pred += self.machine.flops_to_seconds(
+            self.machine.l * self.dispatches_run)
         return pred
 
     def predicted_vs_measured(self) -> dict[str, float]:

@@ -198,6 +198,16 @@ class StreamPlan:
     moves the same volume). Both default to 0: a plan without an inner
     program prices exactly as before.
 
+    A hyperstep may additionally be one superstep of a *host-level* BSP
+    program (DESIGN.md §8, the third pricing level):
+    ``host_comm_words_per_hyperstep`` is the host-level h-relation (the max
+    words one host exchanges with the others per hyperstep) and
+    ``host_supersteps_per_hyperstep`` the number of host barriers, priced
+    with the outer ``(g_host, l_host)`` pair of the accelerator — the
+    superstep term applied recursively on top of the device-level ``max``:
+    ``T_host = T_device + g_host·h_host + l_host·s_host``. Both default to
+    0, so single-host plans price exactly as before.
+
     ``dimension_semantics`` marks each grid axis "parallel" or "arbitrary"
     for Mosaic; the innermost "arbitrary" axes are the sequential hyperstep
     stream on a single chip.
@@ -213,6 +223,8 @@ class StreamPlan:
     mean_flops_per_hyperstep: float | None = None
     comm_words_per_hyperstep: float = 0.0
     supersteps_per_hyperstep: float = 0.0
+    host_comm_words_per_hyperstep: float = 0.0
+    host_supersteps_per_hyperstep: float = 0.0
     # memoised fetch/write-back schedules — the plan is frozen, walks are O(grid)
     _fetch_cache: list | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
@@ -418,6 +430,8 @@ class StreamPlan:
                     writeback_words=[float(writebacks[h])],
                     comm_words=self.comm_words_per_hyperstep,
                     supersteps=self.supersteps_per_hyperstep,
+                    host_comm_words=self.host_comm_words_per_hyperstep,
+                    host_supersteps=self.host_supersteps_per_hyperstep,
                 )
             )
         return costs
@@ -453,6 +467,14 @@ class StreamPlan:
         return (acc.g * self.comm_words_per_hyperstep
                 + acc.l * self.supersteps_per_hyperstep)
 
+    def _host_terms(self, acc: BSPAccelerator) -> float:
+        """Per-hyperstep outer term ``g_host·h_host + l_host·s_host``.
+
+        Additive on top of the device-level ``max`` — the recursion of
+        DESIGN.md §8, not part of the compute-vs-link comparison."""
+        return (acc.g_host * self.host_comm_words_per_hyperstep
+                + acc.l_host * self.host_supersteps_per_hyperstep)
+
     def cost(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
         """Predicted T̃ in FLOP units (paper Eq. 1 / Eq. 2) on ``acc``.
 
@@ -472,8 +494,9 @@ class StreamPlan:
             return bsps_cost(self.hyperstep_costs(), acc)
         words = float(sum(t.words for t in self.inputs)
                       + sum(t.words for t in self.outputs))
-        return self.num_hypersteps * max(
-            self.mean_flops + self._superstep_terms(acc), acc.e * words)
+        return self.num_hypersteps * (
+            max(self.mean_flops + self._superstep_terms(acc), acc.e * words)
+            + self._host_terms(acc))
 
     def predicted_seconds(self, acc: BSPAccelerator, *, exact: bool | None = None) -> float:
         return acc.flops_to_seconds(self.cost(acc, exact=exact))
@@ -577,6 +600,8 @@ def host_plan(
     scratch: tuple[ScratchSpec, ...] = (),
     comm_words_per_hyperstep: float = 0.0,
     supersteps_per_hyperstep: float = 0.0,
+    host_comm_words_per_hyperstep: float = 0.0,
+    host_supersteps_per_hyperstep: float = 0.0,
 ) -> StreamPlan:
     """Build a pod/host-level StreamPlan from open-able ``Stream`` objects.
 
@@ -598,9 +623,14 @@ def host_plan(
     an inner BSP program on a p-core grid (a multi-core
     :class:`~repro.core.hyperstep.HyperstepRunner`), pass *one core's*
     streams plus ``comm_words_per_hyperstep`` / ``supersteps_per_hyperstep``
-    so Eq. 2's ``g·h + l`` superstep terms are priced. The resulting plan
-    prices a :class:`~repro.core.hyperstep.HyperstepRunner` run with the same
-    Eq. 1 used one level down for the Pallas kernels.
+    so Eq. 2's ``g·h + l`` superstep terms are priced. When the device
+    program additionally runs replicated across a host mesh, pass the
+    host-level h-relation and barrier count via
+    ``host_comm_words_per_hyperstep`` / ``host_supersteps_per_hyperstep`` —
+    they are priced with the outer ``(g_host, l_host)`` pair (DESIGN.md §8).
+    The resulting plan prices a
+    :class:`~repro.core.hyperstep.HyperstepRunner` run with the same Eq. 1
+    used one level down for the Pallas kernels.
     """
     if not streams and not out_streams:
         raise ValueError("need at least one stream (down or up)")
@@ -659,6 +689,8 @@ def host_plan(
         flops_per_hyperstep=flops_per_hyperstep,
         comm_words_per_hyperstep=comm_words_per_hyperstep,
         supersteps_per_hyperstep=supersteps_per_hyperstep,
+        host_comm_words_per_hyperstep=host_comm_words_per_hyperstep,
+        host_supersteps_per_hyperstep=host_supersteps_per_hyperstep,
     )
 
 

@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 _AXES: dict[str, int] = {}
 
-DP = ("pod", "data")   # logical data-parallel axes
+DP = ("pod", "host", "data")   # logical data-parallel axes
 TP = "model"           # tensor/sequence-parallel axis
 
 

@@ -1,21 +1,28 @@
 """Sharding rules: FSDP + TP + EP (+ SP for long-context) over the pod mesh.
 
 Mesh axes (launch/mesh.py): single-pod ``(data=16, model=16)``, multi-pod
-``(pod=2, data=16, model=16)``. The combined DP axes ``("pod", "data")`` carry
-both batch parallelism and the FSDP dimension of 2-D weight sharding
-(ZeRO-3-style in GSPMD: every 2-D weight is sharded over *both* the model axis
-— tensor parallel — and the DP axes, and XLA inserts the all-gathers); the
-``model`` axis carries TP (attention heads / ffn), EP (experts) and vocab
-sharding.
+``(pod=2, data=16, model=16)``, host×core ``(host, data, model)``. The
+combined DP axes (``pod``/``host``/``data``) carry both batch parallelism
+and the FSDP dimension of 2-D weight sharding (ZeRO-3-style in GSPMD: every
+2-D weight is sharded over *both* the model axis — tensor parallel — and the
+DP axes, and XLA inserts the all-gathers); the ``model`` axis carries TP
+(attention heads / ffn), EP (experts) and vocab sharding.
 
 BSPS reading (DESIGN.md §2, level 2): a weight shard's all-gather is the
 hyperstep's token fetch from "external memory" (the other chips), overlapped
 by XLA's latency-hiding scheduler with the previous layer's compute — the
 paper's prefetch. The cost of that fetch is the collective roofline term.
+When the DP axes include ``host``, the same all-gather crossing the host
+boundary is the *host-level* h-relation priced by the third level
+(DESIGN.md §8, :func:`repro.distributed.shardspec.host_h_relation`).
 
-Every rule degrades gracefully: a dim is only sharded if divisible by the
-axis size (GSPMD/jit reject uneven argument shardings), falling back to the
-next-best axis or replication — e.g. minicpm's vocab 122753 stays unsharded.
+The rules themselves are data, not code: the declarative tables in
+:mod:`repro.distributed.shardspec` (torchprime-style name patterns →
+logical per-dim axes) are resolved here against the concrete mesh. Every
+rule degrades gracefully: a dim is only sharded if divisible by the axis
+size (GSPMD/jit reject uneven argument shardings), falling back to the next
+alternative axis or replication — e.g. minicpm's vocab 122753 stays
+unsharded.
 """
 
 from __future__ import annotations
@@ -28,15 +35,18 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.shardspec import (
+    CACHE_RULES,
+    PARAM_RULES,
+    build_context,
+    dp_axes,
+    resolve_leaf,
+)
 
 __all__ = [
     "dp_axes", "axis_size", "param_specs", "batch_spec", "cache_specs",
     "named", "opt_state_specs", "logical_to_sharding",
 ]
-
-
-def dp_axes(mesh: Mesh) -> tuple[str, ...]:
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
 def axis_size(mesh: Mesh, axes: str | tuple[str, ...] | None) -> int:
@@ -47,122 +57,27 @@ def axis_size(mesh: Mesh, axes: str | tuple[str, ...] | None) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
-def _div(n: int, mesh: Mesh, axes) -> bool:
-    return n % axis_size(mesh, axes) == 0
-
-
-def _fsdp_enabled() -> bool:
-    """REPRO_NO_FSDP=1 shards weights over the model axis only (TP), trading
-    replicated-weight memory for the removal of per-layer DP all-gathers —
-    the right point on the curve for ≤10B models (EXPERIMENTS.md §Perf A3)."""
-    import os
-    return os.environ.get("REPRO_NO_FSDP", "0") != "1"
-
-
-def _spec2d(mesh: Mesh, shape, in_axes, out_axes) -> P:
-    """Spec for a (fan_in, fan_out) weight: shard out by out_axes (TP) and in
-    by in_axes (FSDP), dropping whichever does not divide."""
-    d_in, d_out = shape[-2], shape[-1]
-    if in_axes != "model" and not _fsdp_enabled():
-        in_axes = None
-    a_in = in_axes if _div(d_in, mesh, in_axes) else None
-    a_out = out_axes if _div(d_out, mesh, out_axes) else None
-    return P(a_in, a_out)
+def _leaf_names(path: Any) -> list[str]:
+    return [str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path]
 
 
 def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any) -> Any:
     """PartitionSpec pytree matching ``abstract_params(cfg)``.
 
-    Rules keyed on parameter names; scan-stacked leaves get a leading None.
+    Resolved from :data:`repro.distributed.shardspec.PARAM_RULES`;
+    scan-stacked leaves get a leading None.
     """
-    dp = dp_axes(mesh)
-    tp = "model"
+    ctx = build_context(mesh)
 
     def rule(path, leaf) -> P:
-        names = [p.key for p in path if hasattr(p, "key")]
-        name = names[-1]
-        shape = leaf.shape
+        names = _leaf_names(path)
+        shape = tuple(leaf.shape)
         scanned = "stack" in names and cfg.scan_layers and len(shape) > 0
+        return resolve_leaf(PARAM_RULES, names, shape, ctx, mesh,
+                            scanned=scanned, kind="sharding")
 
-        def wrap(spec: P) -> P:
-            if scanned:
-                return P(None, *spec)
-            return spec
-
-        # ---- embeddings ----
-        if name == "tokens":
-            va = tp if _div(shape[0], mesh, tp) else None
-            da = dp if _div(shape[1], mesh, dp) else None
-            return P(va, da)
-        if name == "head":
-            return _spec2d(mesh, shape, dp, tp)
-
-        base = shape[1:] if scanned else shape
-
-        # ---- norms / small vectors ----
-        if name in ("scale", "bias", "if_bias", "dt_bias", "conv_b"):
-            return wrap(P(*([None] * len(base))))
-
-        # ---- fan-in → fan-out projections (TP on output) ----
-        if name in ("wq", "wk", "wv", "w_up", "w_gate", "w_in", "w_z",
-                    "shared_up", "shared_gate"):
-            if name in ("wq", "wk", "wv") and len(base) == 3:
-                # block-diagonal per-head (H, dh, dh): replicated — tiny, and
-                # sharding dh forces GSPMD involuntary remat on the per-head
-                # einsum inside the scanned/checkpointed body
-                return wrap(P(None, None, None))
-            return wrap(_spec2d(mesh, base, dp, tp))
-        # ---- fan-out → fan-in projections (TP on input) ----
-        if name in ("wo", "w_down", "w_out", "shared_down"):
-            return wrap(_spec2d(mesh, base, tp, dp))
-        if name == "r":  # slstm recurrent (H, dh, 4dh): tiny, per-step use
-            return wrap(P(None, None, None))
-        if name == "router":
-            return wrap(P(None, None))
-        # ---- mamba ----
-        if name == "conv_w":
-            a = tp if _div(base[1], mesh, tp) else None
-            return wrap(P(None, a))
-        if name in ("d_skip",):
-            a = tp if _div(base[0], mesh, tp) else None
-            return wrap(P(a))
-        if name == "a_log":
-            a = tp if _div(base[0], mesh, tp) else None
-            return wrap(P(a, None))
-        if name == "w_x":
-            a = tp if _div(base[0], mesh, tp) else None
-            return wrap(P(a, None))
-        if name == "w_dt":
-            a = tp if _div(base[1], mesh, tp) else None
-            return wrap(P(None, a))
-        if name == "w_if":
-            a = tp if _div(base[0], mesh, tp) else None
-            return wrap(P(a, None))
-        raise ValueError(f"no sharding rule for parameter {'/'.join(map(str, names))}")
-
-    def moe_rule(path, leaf) -> P:
-        """Expert-parallel override for routed expert weights (E, ·, ·)."""
-        names = [p.key for p in path if hasattr(p, "key")]
-        name = names[-1]
-        shape = leaf.shape
-        scanned = "stack" in names and cfg.scan_layers
-        base = shape[1:] if scanned else shape
-        if name in ("w_up", "w_gate", "w_down") and len(base) == 3:
-            e = base[0]
-            if _div(e, mesh, "model"):          # EP: experts over model axis
-                da = dp if _div(base[2] if name != "w_down" else base[1], mesh, dp) else None
-                spec = P("model", None, da) if name != "w_down" else P("model", da, None)
-            else:                                # TP inside each expert (qwen2-moe: 60)
-                if name == "w_down":
-                    a = "model" if _div(base[1], mesh, "model") else None
-                    spec = P(None, a, None)
-                else:
-                    a = "model" if _div(base[2], mesh, "model") else None
-                    spec = P(None, None, a)
-            return P(None, *spec) if scanned else spec
-        return rule(path, leaf)
-
-    return jax.tree_util.tree_map_with_path(moe_rule, params_shape)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
 
 
 def batch_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec) -> P:
@@ -177,51 +92,18 @@ def batch_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec) -> P:
 
 def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, cache_shape: Any) -> Any:
     """Decode-cache shardings: batch over DP if divisible, else sequence over
-    ``data`` (long_500k), state feature dims over ``model``."""
+    ``data`` (long_500k), state feature dims over ``model`` — resolved from
+    :data:`repro.distributed.shardspec.CACHE_RULES`."""
     dp = dp_axes(mesh)
     batch_ok = shape.global_batch % axis_size(mesh, dp) == 0
+    ctx = build_context(mesh, batch_ok=batch_ok)
 
     def rule(path, leaf) -> P:
-        names = [p.key for p in path if hasattr(p, "key")]
-        name = names[-1]
-        shape_ = leaf.shape
+        names = _leaf_names(path)
+        shape_ = tuple(leaf.shape)
         scanned = cfg.scan_layers and len(shape_) > 0 and "layers" in names
-        base = shape_[1:] if scanned else shape_
-
-        def wrap(spec: P) -> P:
-            return P(None, *spec) if scanned else spec
-
-        if name == "len":
-            return P()
-        ba = dp if (batch_ok and base[0] % axis_size(mesh, dp) == 0) else None
-        if name in ("k", "v"):       # (B, S, Hkv, hd)
-            # model axis: kv-heads when divisible, else sequence (dense decode
-            # attention reduces over seq — GSPMD partial-sums across shards)
-            seq_axes: list[str] = []
-            head_ax = None
-            if base[2] % axis_size(mesh, "model") == 0:
-                head_ax = "model"
-            elif base[1] % axis_size(mesh, "model") == 0:
-                seq_axes.append("model")
-            if ba is None and base[1] % axis_size(mesh, tuple(["data"] + seq_axes)) == 0:
-                seq_axes.insert(0, "data")   # long_500k: batch=1 ⇒ SP cache
-            seq_spec = tuple(seq_axes) if seq_axes else None
-            return wrap(P(ba, seq_spec, head_ax, None))
-        if name == "conv":           # (B, K-1, di)
-            a = "model" if base[2] % axis_size(mesh, "model") == 0 else None
-            return wrap(P(ba, None, a))
-        if name == "h":              # mamba (B, di, ds) | slstm (B, H, dh)
-            a = "model" if base[1] % axis_size(mesh, "model") == 0 else None
-            return wrap(P(ba, a, *([None] * (len(base) - 2))))
-        if name in ("C",):           # mlstm (B, H, dh, dh)
-            a = "model" if base[2] % axis_size(mesh, "model") == 0 else None
-            return wrap(P(ba, None, a, None))
-        if name in ("n",):           # (B, H, dh)
-            a = "model" if base[2] % axis_size(mesh, "model") == 0 else None
-            return wrap(P(ba, None, a))
-        if name in ("m", "c"):       # (B, H) | slstm (B, H, dh)
-            return wrap(P(ba, *([None] * (len(base) - 1))))
-        raise ValueError(f"no cache rule for {'/'.join(map(str, names))}")
+        return resolve_leaf(CACHE_RULES, names, shape_, ctx, mesh,
+                            scanned=scanned, kind="cache")
 
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 

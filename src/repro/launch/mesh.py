@@ -37,3 +37,38 @@ def make_host_mesh(model: int | None = None) -> Mesh:
             f"model={model} does not divide the {n} available device(s); "
             f"a ({n // model}, {model}) mesh would drop {n % model} of them")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_host_core_mesh(hosts: int, *, model: int | None = None) -> Mesh:
+    """The third-level ``(host, data, model)`` mesh (DESIGN.md §8).
+
+    ``hosts`` leading groups, each a ``(data, model)`` core grid over the
+    remaining devices — the mesh the host-level pricing composes over: the
+    ``host`` axis joins the DP axes (``shardspec.dp_axes``), so FSDP
+    all-gathers and gradient reductions crossing it are exactly the traffic
+    ``host_h_relation`` charges with ``(g_host, l_host)``. CI fakes the
+    devices with ``--xla_force_host_platform_device_count=8`` for a 2×4
+    host×core mesh, the HomebrewNLP trick from the related repos.
+
+    Validation mirrors :func:`make_host_mesh`: every factor must divide so
+    no device is silently dropped.
+    """
+    n = len(jax.devices())
+    if hosts <= 0:
+        raise ValueError(f"hosts must be positive, got {hosts}")
+    if hosts > n:
+        raise ValueError(
+            f"hosts={hosts} exceeds the {n} available device(s); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count to fake more")
+    if n % hosts != 0:
+        raise ValueError(
+            f"hosts={hosts} does not divide the {n} available device(s); "
+            f"would drop {n % hosts} of them")
+    per_host = n // hosts
+    model = model or per_host
+    if per_host % model != 0:
+        raise ValueError(
+            f"model={model} does not divide the {per_host} device(s) per host; "
+            f"would drop {per_host % model} of them")
+    return jax.make_mesh((hosts, per_host // model, model),
+                         ("host", "data", "model"))

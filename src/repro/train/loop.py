@@ -44,9 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core.bsp import BSPAccelerator
-from repro.core.calibrate import calibrate
+from repro.core.calibrate import calibrate, calibrate_host_level
 from repro.core.hyperstep import HyperstepRunner
 from repro.core.plan import host_plan
 from repro.core.stream import Stream
@@ -135,6 +138,8 @@ def _train_compiled(
     machine: BSPAccelerator,
     data_cfg: DataConfig,
     log: Callable[[str], None],
+    host_comm_words: float = 0.0,
+    host_supersteps: float = 0.0,
 ) -> tuple[Any, Any, dict[str, float]]:
     """Run training as compiled dispatches, one per checkpoint interval.
 
@@ -177,7 +182,9 @@ def _train_compiled(
                 token_size=1, name="metrics")
             plan = host_plan(
                 [batches], out_streams=[metrics_out],
-                flops_per_hyperstep=hyperstep_flops, name=f"train_{cfg.name}")
+                flops_per_hyperstep=hyperstep_flops, name=f"train_{cfg.name}",
+                host_comm_words_per_hyperstep=host_comm_words,
+                host_supersteps_per_hyperstep=host_supersteps)
             runners[seg] = (
                 HyperstepRunner(hyperstep, [batches],
                                 out_streams=[metrics_out],
@@ -225,6 +232,7 @@ def train(
     data_cfg: DataConfig | None = None,
     jit_kwargs: dict[str, Any] | None = None,
     machine: BSPAccelerator | None = None,
+    mesh: Any | None = None,
     log: Callable[[str], None] = print,
 ) -> dict[str, Any]:
     """Run (or resume) a training job; returns final state + history.
@@ -232,7 +240,40 @@ def train(
     ``machine`` is the :class:`BSPAccelerator` the run is priced on (default:
     a fast host calibration) — the returned ``plan_row`` is the runner's
     predicted-vs-measured table row.
+
+    ``mesh`` runs the whole job sharded under that device mesh: parameters
+    and optimizer moments are placed by the declarative rules
+    (:mod:`repro.distributed.shardspec`), and if the mesh has a ``host``
+    axis the plan is priced at the third level too — ``(g_host, l_host)``
+    calibrated over real collectives (:func:`calibrate_host_level`), the
+    h-relation derived from the same resolved specs GSPMD executes
+    (:func:`~repro.distributed.shardspec.host_h_relation`), so
+    ``plan_row["predicted_seconds"]`` is the full recursion
+    ``T_device + g_host·h_host + l_host·s_host`` (DESIGN.md §8).
     """
+    if mesh is not None:
+        from repro.distributed import ctx as dctx
+        with mesh, dctx.mesh_axes(dict(mesh.shape)):
+            return _train_body(cfg, tcfg, opt, batch_putter=batch_putter,
+                               data_cfg=data_cfg, jit_kwargs=jit_kwargs,
+                               machine=machine, mesh=mesh, log=log)
+    return _train_body(cfg, tcfg, opt, batch_putter=batch_putter,
+                       data_cfg=data_cfg, jit_kwargs=jit_kwargs,
+                       machine=machine, mesh=None, log=log)
+
+
+def _train_body(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    opt: AdamW,
+    *,
+    batch_putter: Callable[[dict], dict] | None,
+    data_cfg: DataConfig | None,
+    jit_kwargs: dict[str, Any] | None,
+    machine: BSPAccelerator | None,
+    mesh: Any | None,
+    log: Callable[[str], None],
+) -> dict[str, Any]:
     data_cfg = data_cfg or DataConfig(
         vocab_size=cfg.vocab_size, seq_len=512, global_batch=8, seed=tcfg.seed)
     stream = TokenStream(data_cfg)
@@ -249,6 +290,31 @@ def train(
             params, opt_state = state["params"], state["opt_state"]
             stream.load_state_dict(data_state)        # seek — the BSPS restart
             log(f"[resume] step {start_step}, stream cursor {stream.cursor}")
+
+    host_comm_words = 0.0
+    host_supersteps = 0.0
+    if mesh is not None:
+        from repro.distributed import sharding as sh
+        from repro.distributed.shardspec import host_h_relation
+        specs = sh.param_specs(cfg, mesh, params)
+        params = sh.logical_to_sharding(mesh, params, specs)
+        opt_state = sh.logical_to_sharding(
+            mesh, opt_state, {"m": specs, "v": specs, "step": P()})
+        machine = machine or calibrate(fast=True)
+        if "host" in mesh.axis_names:
+            machine = calibrate_host_level(machine, mesh)
+            hrel = host_h_relation(mesh, specs, params)
+            host_comm_words = hrel["h_words"]
+            host_supersteps = hrel["supersteps"]
+            log(f"[mesh] hosts={hrel['hosts']} h_words/step="
+                f"{host_comm_words:.3g} g_host={machine.g_host:.3g} "
+                f"l_host={machine.l_host:.3g}")
+        if batch_putter is None and not tcfg.compiled:
+            bspec = sh.batch_spec(cfg, mesh, ShapeSpec(
+                "train", data_cfg.seq_len, data_cfg.global_batch, "train"))
+            sharding_ = NamedSharding(mesh, bspec)
+            batch_putter = lambda b: {             # noqa: E731
+                k: jax.device_put(v, sharding_) for k, v in b.items()}
 
     step_fn = jax.jit(make_train_step(cfg, opt, aux_weight=tcfg.aux_weight),
                       donate_argnums=(0, 1), **(jit_kwargs or {}))
@@ -270,7 +336,8 @@ def train(
         machine = machine or calibrate(fast=True)
         params, opt_state, plan_row = _train_compiled(
             cfg, tcfg, step_fn, stream, params, opt_state, start_step,
-            history, machine, data_cfg, log)
+            history, machine, data_cfg, log,
+            host_comm_words=host_comm_words, host_supersteps=host_supersteps)
         log("[plan] " + " ".join(f"{k}={v:.4g}" for k, v in plan_row.items()))
     elif steps_left > 0:
         batches = BatchStream(stream, steps_left, put_fn=batch_putter)
@@ -289,6 +356,8 @@ def train(
             [batches], out_streams=out_streams, out_every=out_every,
             flops_per_hyperstep=hyperstep_flops,
             name=f"train_{cfg.name}",
+            host_comm_words_per_hyperstep=host_comm_words,
+            host_supersteps_per_hyperstep=host_supersteps,
         )
         machine = machine or calibrate(fast=True)
 

@@ -1,0 +1,204 @@
+"""Third pricing level (DESIGN.md §8): recursive host terms + dispatch pricing.
+
+Unit tests pin the Eq. 2 recursion ``T_host = T_device + g_host·h_host +
+l_host·s_host`` at every layer it passes through — HyperstepCost, StreamPlan,
+host_plan — plus the execution-mode dispatch pricing ISSUE 7's SpMV satellite
+fixed (the host loop pays one ``l`` per hyperstep, a compiled run one per
+segment). Multi-device pieces run in a subprocess with the XLA device-count
+override, same protocol as tests/test_distributed.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HyperstepRunner, StreamSet, host_plan
+from repro.core.bsp import BSPAccelerator
+from repro.core.calibrate import calibrate, calibrate_host_level
+from repro.core.cost import HyperstepCost
+from repro.launch.mesh import make_host_core_mesh, make_host_mesh
+
+# fixed pack: every term hand-checkable (host level: 4 hosts, g=7, l=11)
+ACC = BSPAccelerator(p=1, g=2.0, l=5.0, r=1e9, e=3.0,
+                     L=1 << 20, E=1 << 24,
+                     hosts=4, g_host=7.0, l_host=11.0)
+
+
+# --------------------------------------------------- HyperstepCost units ----
+
+
+def test_host_cost_is_recursive_superstep_term():
+    c = HyperstepCost(bsp_flops=100.0, fetch_words=[10.0],
+                      comm_words=4.0, supersteps=2.0,
+                      host_comm_words=6.0, host_supersteps=3.0)
+    # inner program: 100 + g·4 + l·2; link: e·10; device = max of the two
+    assert c.compute_cost(ACC) == 100.0 + 2.0 * 4.0 + 5.0 * 2.0
+    assert c.link_cost(ACC) == 3.0 * 10.0
+    assert c.device_cost(ACC) == 118.0
+    # outer pair applied once more, additively on top of the max
+    assert c.host_cost(ACC) == 7.0 * 6.0 + 11.0 * 3.0
+    assert c.cost(ACC) == 118.0 + 75.0
+
+
+def test_host_terms_default_to_zero():
+    c = HyperstepCost(bsp_flops=8.0, fetch_words=[1.0])
+    assert c.host_cost(ACC) == 0.0
+    assert c.cost(ACC) == c.device_cost(ACC)
+
+
+def test_accelerator_validates_host_fields():
+    with pytest.raises(ValueError, match="hosts"):
+        BSPAccelerator(p=1, g=0, l=0, r=1e9, e=1, L=4, E=8, hosts=0)
+    with pytest.raises(ValueError, match="g_host"):
+        BSPAccelerator(p=1, g=0, l=0, r=1e9, e=1, L=4, E=8, g_host=-1.0)
+
+
+# ------------------------------------------------------- StreamPlan layer ----
+
+
+def _tiny_plan(**host_kwargs):
+    ss = StreamSet()
+    s = ss.create(np.zeros((8, 4), np.float32), 1, name="x")
+    return host_plan([s], flops_per_hyperstep=2.0, name="tiny", **host_kwargs)
+
+
+def test_plan_host_terms_are_additive_per_hyperstep():
+    base = _tiny_plan()
+    hosted = _tiny_plan(host_comm_words_per_hyperstep=6.0,
+                        host_supersteps_per_hyperstep=3.0)
+    extra = hosted.cost(ACC) - base.cost(ACC)
+    assert extra == pytest.approx(
+        hosted.num_hypersteps * (7.0 * 6.0 + 11.0 * 3.0))
+    # the host term sits outside the compute-vs-link max: it must not flip
+    # the bandwidth-heavy classification
+    assert hosted.bandwidth_heavy(ACC) == base.bandwidth_heavy(ACC)
+    hc = hosted.hyperstep_costs()[0]
+    assert hc.host_comm_words == 6.0 and hc.host_supersteps == 3.0
+    # closed form carries the same additive term
+    exact = hosted.cost(ACC, exact=True) - base.cost(ACC, exact=True)
+    closed = hosted.cost(ACC, exact=False) - base.cost(ACC, exact=False)
+    assert exact == pytest.approx(closed)
+
+
+# ------------------------------------------- execution-mode dispatch cost ----
+
+
+def _counting_runner(acc):
+    ss = StreamSet()
+    s = ss.create(np.arange(32, dtype=np.float32).reshape(8, 4), 1, name="x")
+    plan = host_plan([s], flops_per_hyperstep=8.0, name="count")
+    step = jax.jit(lambda state, toks: state + jnp.sum(toks[0]))
+    return HyperstepRunner(step, [s], plan=plan, machine=acc), plan
+
+
+def test_host_loop_prices_one_dispatch_per_hyperstep():
+    acc = BSPAccelerator(p=1, g=0.0, l=1000.0, r=1e9, e=0.5,
+                         L=1 << 20, E=1 << 24)
+    runner, plan = _counting_runner(acc)
+    runner.run(jnp.float32(0.0))
+    assert runner.hypersteps_run == plan.num_hypersteps == 8
+    assert runner.dispatches_run == 8
+    assert runner.predicted_seconds() == pytest.approx(
+        plan.predicted_seconds(acc) + acc.flops_to_seconds(acc.l * 8))
+
+
+def test_compiled_run_prices_one_dispatch_per_segment():
+    acc = BSPAccelerator(p=1, g=0.0, l=1000.0, r=1e9, e=0.5,
+                         L=1 << 20, E=1 << 24)
+    runner, plan = _counting_runner(acc)
+    runner.run(jnp.float32(0.0), compiled=True)
+    assert runner.hypersteps_run == 8
+    assert runner.dispatches_run == 1
+    assert runner.predicted_seconds() == pytest.approx(
+        plan.predicted_seconds(acc) + acc.flops_to_seconds(acc.l * 1))
+    # a second segment pays a second l; reset_records clears the counter
+    runner.run(jnp.float32(0.0), compiled=True)
+    assert runner.dispatches_run == 2
+    runner.reset_records()
+    assert runner.dispatches_run == 0
+
+
+_EXAMPLES_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples")
+
+
+def test_spmv_host_mode_pricing_regression():
+    """ISSUE 7 satellite: host-mode SpMV was mispriced ~250× (0.004) because
+    the per-hyperstep dispatch overhead — the machine's calibrated ``l`` —
+    was never charged. Pin both modes inside a wide band that still catches
+    that failure class."""
+    if _EXAMPLES_DIR not in sys.path:
+        sys.path.insert(0, _EXAMPLES_DIR)
+    from bsps_spmv import make_ell_blocks, make_spmv_runner
+
+    acc = calibrate(fast=True)
+    cols, vals, x = make_ell_blocks(1 << 12, 0.01, 128)
+    for compiled in (False, True):
+        runner, _, state0 = make_spmv_runner(cols, vals, x, acc)
+        runner.run(state0(), compiled=compiled)     # warm (trace/compile)
+        runner.reset_records()
+        runner.run(state0(), compiled=compiled)
+        ratio = runner.predicted_vs_measured()["pred_over_meas"]
+        assert 0.02 < ratio < 50.0, (
+            f"{'compiled' if compiled else 'host'} mode pred_over_meas "
+            f"{ratio:.4f} outside band — dispatch pricing regressed?")
+
+
+# --------------------------------------------------- mesh + calibration ----
+
+
+def test_make_host_core_mesh_validates_factors():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="positive"):
+        make_host_core_mesh(0)
+    with pytest.raises(ValueError, match="exceeds"):
+        make_host_core_mesh(n + 1)
+    mesh = make_host_core_mesh(1, model=1)
+    assert mesh.axis_names == ("host", "data", "model")
+    assert mesh.shape["host"] == 1
+
+
+def test_calibrate_host_level_without_host_axis_is_identity():
+    acc = BSPAccelerator(p=1, g=0.0, l=0.0, r=1e9, e=1.0, L=4, E=8,
+                         hosts=3, g_host=9.0, l_host=9.0)
+    out = calibrate_host_level(acc, make_host_mesh())
+    assert (out.hosts, out.g_host, out.l_host) == (1, 0.0, 0.0)
+    # priced like a single-host pack
+    c = HyperstepCost(bsp_flops=4.0, fetch_words=[1.0],
+                      host_comm_words=5.0, host_supersteps=5.0)
+    assert c.cost(out) == c.device_cost(out)
+
+
+def test_host_mesh_calibration_eight_devices():
+    """End to end on a faked 2×2×2 host×core mesh: the psum-fit calibration
+    yields a usable (hosts, g_host, l_host) pack."""
+    code = """
+        import jax
+        from repro.core.bsp import BSPAccelerator
+        from repro.core.calibrate import calibrate_host_level, measure_host_superstep
+        from repro.launch.mesh import make_host_core_mesh
+
+        mesh = make_host_core_mesh(2, model=2)
+        assert dict(mesh.shape) == {"host": 2, "data": 2, "model": 2}
+        g_sec, l_sec = measure_host_superstep(mesh)
+        assert g_sec >= 0.0 and l_sec >= 0.0
+        acc = BSPAccelerator(p=1, g=0.0, l=0.0, r=1e9, e=1.0,
+                             L=1 << 20, E=1 << 24)
+        acc = calibrate_host_level(acc, mesh)
+        assert acc.hosts == 2
+        assert acc.g_host >= 0.0 and acc.l_host >= 0.0
+        print("OK", acc.hosts)
+    """
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK 2" in out.stdout
