@@ -173,6 +173,12 @@ def run(smoke: bool = True, out_path: str = "BENCH_dispatch.json"):
     return rows
 
 
+def check(rows) -> list[str]:
+    """Floor violations for ``--check`` / ``benchmarks.run --check``."""
+    slow = [n for n, v, _ in rows if n.endswith("_speedup") and v < 1.0]
+    return [f"compiled mode slower than host loop: {slow}"] if slow else []
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -187,9 +193,9 @@ def main() -> None:
     for name, value, derived in rows:
         print(f"{name},{value:.6g},{derived}")
     if args.check:
-        slow = [n for n, v, _ in rows if n.endswith("_speedup") and v < 1.0]
-        if slow:
-            raise SystemExit(f"compiled mode slower than host loop: {slow}")
+        problems = check(rows)
+        if problems:
+            raise SystemExit("; ".join(problems))
 
 
 if __name__ == "__main__":

@@ -17,7 +17,8 @@ RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun_baseline.jsonl"
 def load(path: str = RESULTS) -> list[dict]:
     if not os.path.exists(path):
         return []
-    recs = [json.loads(line) for line in open(path)]
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
     return [r for r in recs if "roofline" in r]
 
 

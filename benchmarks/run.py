@@ -48,16 +48,29 @@ MODULES = {
 def main() -> None:
     picks = sys.argv[1:] or list(MODULES)
     print("name,value,derived")
-    failed = []
+    failed: dict[str, str] = {}
     for name in picks:
         try:
-            for row in MODULES[name].run():
+            rows = list(MODULES[name].run())
+            for row in rows:
                 print(f"{row[0]},{row[1]:.6g},{row[2]}", flush=True)
-        except Exception:
-            failed.append(name)
+        except Exception as e:
+            failed[name] = f"{type(e).__name__}: {e}"
             traceback.print_exc()
+            continue
+        # modules with a --check floor expose it as check(rows); a violated
+        # floor fails the harness the same way a crash does
+        checker = getattr(MODULES[name], "check", None)
+        problems = checker(rows) if checker is not None else []
+        if problems:
+            failed[name] = "; ".join(problems)
+    # per-bench summary on stderr (the CSV on stdout stays parseable) so a
+    # failing check cannot scroll past in CI logs
+    for name in picks:
+        status = f"FAIL ({failed[name]})" if name in failed else "PASS"
+        print(f"[bench] {name}: {status}", file=sys.stderr, flush=True)
     if failed:
-        raise SystemExit(f"benchmark modules failed: {failed}")
+        raise SystemExit(f"benchmark modules failed: {sorted(failed)}")
 
 
 if __name__ == "__main__":

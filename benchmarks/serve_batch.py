@@ -213,6 +213,23 @@ def run(smoke: bool = True, out_path: str = "BENCH_serve_batch.json"):
     return rows
 
 
+def check(rows) -> list[str]:
+    """Floor violations for ``--check`` / ``benchmarks.run --check``."""
+    vals = {n: v for n, v, _ in rows}
+    problems = []
+    if vals["serve_batch8_speedup_vs_sequential"] < FLOOR_SPEEDUP:
+        problems.append(
+            f"batch-8 speedup {vals['serve_batch8_speedup_vs_sequential']:.2f} "
+            f"< floor {FLOOR_SPEEDUP}")
+    if vals["serve_batch_admission_matches"] < 1:
+        problems.append("no admission verdict matched measurement")
+    if vals["serve_batch_prefill_speedup"] < 1.0:
+        problems.append(
+            f"chunked prefill slower than token-at-a-time "
+            f"({vals['serve_batch_prefill_speedup']:.2f}x)")
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
@@ -228,18 +245,7 @@ def main() -> None:
     for name, value, derived in rows:
         print(f"{name},{value:.6g},{derived}")
     if args.check:
-        vals = {n: v for n, v, _ in rows}
-        problems = []
-        if vals["serve_batch8_speedup_vs_sequential"] < FLOOR_SPEEDUP:
-            problems.append(
-                f"batch-8 speedup {vals['serve_batch8_speedup_vs_sequential']:.2f} "
-                f"< floor {FLOOR_SPEEDUP}")
-        if vals["serve_batch_admission_matches"] < 1:
-            problems.append("no admission verdict matched measurement")
-        if vals["serve_batch_prefill_speedup"] < 1.0:
-            problems.append(
-                f"chunked prefill slower than token-at-a-time "
-                f"({vals['serve_batch_prefill_speedup']:.2f}x)")
+        problems = check(rows)
         if problems:
             raise SystemExit("; ".join(problems))
 

@@ -71,10 +71,11 @@ def main() -> None:
         # the dispatch, not the one-off XLA trace of the scan
         runner, outs, _ = make_cannon_runner(a, b, m_blocks, n_grid=n_grid,
                                              mesh=mesh, machine=acc)
-        state0 = lambda: cannon_compiled_state(n, m_blocks, np.float32)
-        runner.run(state0(), num_hypersteps=m_blocks**3, compiled=True)
+        runner.run(cannon_compiled_state(n, m_blocks, np.float32),
+                   num_hypersteps=m_blocks**3, compiled=True)
         runner.reset_records()
-        runner.run(state0(), num_hypersteps=m_blocks**3, compiled=True)
+        runner.run(cannon_compiled_state(n, m_blocks, np.float32),
+                   num_hypersteps=m_blocks**3, compiled=True)
         c = gather_c(outs, n, m_blocks, n_grid)
         err = float(np.abs(c - a @ b).max())
         row = runner.predicted_vs_measured()

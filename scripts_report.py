@@ -12,7 +12,10 @@ import os
 paths = sys.argv[1:] or [p for p in
          ("results/dryrun_baseline.jsonl", "results/dryrun_fused.jsonl")
          if os.path.exists(p)]
-recs = [json.loads(l) for p in paths for l in open(p)]
+recs = []
+for p in paths:
+    with open(p) as f:
+        recs.extend(json.loads(line) for line in f)
 
 # dedup: keep the last record per (arch, shape, mesh, tag)
 latest = {}
@@ -54,7 +57,9 @@ if os.path.exists("results/hillclimb.jsonl"):
     print("| cell | tag | compute s | memory raw/fused s | collective s | "
           "useful | frac (fused) | peak GB |")
     print("|---|---|---|---|---|---|---|---|")
-    for line in open("results/hillclimb.jsonl"):
+    with open("results/hillclimb.jsonl") as f:
+        lines = f.readlines()
+    for line in lines:
         h = json.loads(line)
         rf = h.get("roofline")
         if not rf:

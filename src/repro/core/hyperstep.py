@@ -83,9 +83,10 @@ import numpy as np
 from repro.core.bsp import BSPAccelerator
 from repro.core.plan import StreamPlan
 from repro.core.stream import Stream
+from repro.core.verify import Diagnostic, PlanVerificationError, verify_runner
 
 __all__ = ["HyperstepRecord", "HyperstepRunner", "CompiledHyperstepProgram",
-           "run_bsps"]
+           "PlanVerificationError", "run_bsps"]
 
 
 @dataclasses.dataclass
@@ -380,6 +381,15 @@ class HyperstepRunner:
         price it on. When both are given the runner predicts its own wall
         time with Eq. 1 before running — the plan also supplies the default
         hyperstep count.
+    verify:
+        If True (default) the runner statically verifies the run before
+        executing or compiling it (DESIGN.md §9,
+        :func:`repro.core.verify.verify_runner`): cursor overruns, bad MOVE
+        seeks, up-stream write races, backing aliasing, and budget blowouts
+        raise :class:`~repro.core.verify.PlanVerificationError` *before* any
+        dispatch. Verification is memoized per (hyperstep count, cursor
+        positions), so hot paths pay a set lookup. ``verify=False`` opts out
+        (tests that exercise runtime failure paths).
     """
 
     def __init__(
@@ -397,6 +407,7 @@ class HyperstepRunner:
         on_hyperstep_end: Callable[[int, Sequence[Any]], None] | None = None,
         plan: StreamPlan | None = None,
         machine: BSPAccelerator | None = None,
+        verify: bool = True,
     ) -> None:
         self._step = step
         self._multi = cores is not None
@@ -460,6 +471,8 @@ class HyperstepRunner:
         # (which calibrate() measures as exactly that per-dispatch latency)
         self.dispatches_run: int = 0
         self._compiled_cache: dict[int, CompiledHyperstepProgram] = {}
+        self._verify_enabled = verify
+        self._verified_keys: set[Any] = set()
 
     # -- schedule helpers ----------------------------------------------------
 
@@ -532,6 +545,35 @@ class HyperstepRunner:
 
     def _on_end_arg(self) -> Any:
         return self._streams if self._multi else self._streams[0]
+
+    # -- static verification (DESIGN.md §9) ----------------------------------
+
+    def verify(self, num_hypersteps: int | None = None) -> list[Diagnostic]:
+        """Statically verify the upcoming run; returns all diagnostics.
+
+        Pure cursor arithmetic (no data moves, nothing compiles) — see
+        :func:`repro.core.verify.verify_runner`. :meth:`run` and
+        :meth:`compile` call this automatically unless the runner was built
+        with ``verify=False``; call it directly to see warnings and infos,
+        which the automatic hook ignores.
+        """
+        return verify_runner(self, num_hypersteps)
+
+    def _verify_or_raise(self, total: int) -> None:
+        """The compile/run hook: raise on error findings, memoized per walk."""
+        if not self._verify_enabled:
+            return
+        key = (
+            total,
+            tuple(tuple(s.cursor for s in ss) for ss in self._streams),
+            tuple(tuple(s.cursor for s in outs) for outs in self._out_streams),
+        )
+        if key in self._verified_keys:
+            return
+        errors = [d for d in self.verify(total) if d.severity == "error"]
+        if errors:
+            raise PlanVerificationError(errors)
+        self._verified_keys.add(key)
 
     # -- compiled mode -------------------------------------------------------
 
@@ -647,6 +689,7 @@ class HyperstepRunner:
         total = self._resolve_total(num_hypersteps)
         if total <= 0:
             raise ValueError(f"nothing to compile (total={total})")
+        self._verify_or_raise(total)
         sched = self._simulate_schedule(total)
         prog = CompiledHyperstepProgram(
             total=total, schedule=sched,
@@ -714,6 +757,7 @@ class HyperstepRunner:
         total = self._resolve_total(num_hypersteps)
         if total <= 0:
             return state
+        self._verify_or_raise(total)
         prog = self._compiled_cache.get(total)
         if prog is not None and not self._schedule_current(prog.schedule):
             # segment-boundary rejoin: the streams stand at a different cursor
@@ -849,6 +893,7 @@ class HyperstepRunner:
             total = self._resolve_total(num_hypersteps)
             if total <= 0:
                 return state
+            self._verify_or_raise(total)
 
             # Hyperstep 0's tokens are assumed resident at program start
             # (paper §2); rate-0 operands are fetched here, once, and reused.

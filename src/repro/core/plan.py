@@ -644,11 +644,22 @@ def host_plan(
 
     h = num_hypersteps
     if h is None:
-        budgets = [(s.num_tokens - s.cursor) // r
-                   for s, r in zip(streams, rates) if r > 0]
-        # the runner advances every up-stream cursor once per hyperstep;
-        # out_every only changes how often a *completed* token is priced
-        budgets += [s.num_tokens - s.cursor for s in out_streams]
+        budgets = []
+        for s, r in zip(streams, rates):
+            if r <= 0:
+                continue
+            avail = s.num_tokens - s.cursor
+            if avail % r:
+                raise ValueError(
+                    f"[BSPS103] rate {r} does not divide the {avail} "
+                    f"remaining tokens of {s.name or s.stream_id} in "
+                    f"{name!r}: the tail hyperstep would silently truncate "
+                    f"(pad the stream or pass num_hypersteps explicitly)")
+            budgets.append(avail // r)
+        # the runner advances an up-stream cursor once per *flush*, i.e.
+        # every out_every[j] hypersteps — mirror HyperstepRunner._remaining
+        budgets += [(s.num_tokens - s.cursor) * e
+                    for s, e in zip(out_streams, out_every)]
         if not budgets:
             raise ValueError("all streams are resident; pass num_hypersteps")
         h = min(budgets)
@@ -707,14 +718,16 @@ def streamed_operand(name: str, words: int, *, dtype: Any = jnp.float32,
     pool) do not fit in local memory, so each hyperstep streams them through
     the core again — the index map advances every step, which is exactly what
     the fetch/write-back schedules charge. The degenerate opposite (fetched
-    once) is a rate-0 resident token.
+    once) is a rate-0 resident token. ``full_shape`` stays ``None``: the
+    backing extent grows with the hyperstep count, so declaring one token's
+    worth would contradict the advancing map (verify.py flags that as
+    BSPS104).
     """
     return TokenSpec(
         name=name,
         block_shape=(int(words),),
         index_map=lambda t: (t,),
         dtype=dtype,
-        full_shape=(int(words),),
         direction=direction,
         rate=1,
     )
@@ -884,7 +897,12 @@ def admission_decision(
 
 @dataclasses.dataclass(frozen=True)
 class PlanChoice:
-    """One scored candidate from :func:`autotune`."""
+    """One scored candidate from :func:`autotune`.
+
+    ``diagnostics`` holds the candidate's static-verifier findings
+    (:func:`repro.core.verify.verify_plan`) — a rejected candidate carries
+    the diagnostic that rejected it instead of being silently filtered.
+    """
 
     params: Mapping[str, Any]
     plan: StreamPlan
@@ -892,6 +910,7 @@ class PlanChoice:
     predicted_flops: float
     predicted_seconds: float
     measured_seconds: float | None = None
+    diagnostics: tuple = ()
 
     def row(self) -> dict[str, Any]:
         """Flat record for the predicted-vs-measured tables."""
@@ -906,6 +925,8 @@ class PlanChoice:
             out["measured_seconds"] = self.measured_seconds
             if self.measured_seconds > 0:
                 out["pred_over_meas"] = self.predicted_seconds / self.measured_seconds
+        if self.diagnostics:
+            out["diagnostics"] = " ".join(d.code for d in self.diagnostics)
         return out
 
 
@@ -921,18 +942,28 @@ def enumerate_plans(
     ``exact`` is forwarded to :meth:`StreamPlan.cost` — pass False to score
     with the O(1) closed form regardless of grid size (e.g. sweeps over many
     production-shaped cells).
+
+    Every candidate is statically verified
+    (:func:`repro.core.verify.verify_plan`, same ``exact`` economy): a
+    candidate with error-severity findings is infeasible and carries them in
+    :attr:`PlanChoice.diagnostics` rather than being silently filtered.
     """
+    from repro.core.verify import verify_plan
+
     choices = []
     for params in candidates:
         plan = build(**params)
         flops = plan.cost(acc, exact=exact)
+        diags = tuple(verify_plan(plan, acc, exact=exact))
         choices.append(
             PlanChoice(
                 params=dict(params),
                 plan=plan,
-                feasible=plan.fits(acc),
+                feasible=plan.fits(acc)
+                and not any(d.severity == "error" for d in diags),
                 predicted_flops=flops,
                 predicted_seconds=acc.flops_to_seconds(flops),
+                diagnostics=diags,
             )
         )
     # ties (common on the degenerate closed-form path) break toward fewer
@@ -987,10 +1018,13 @@ def autotune(
     choices = enumerate_plans(build, candidates, acc, exact=exact)
     feasible = [c for c in choices if c.feasible]
     if not feasible:
+        codes = sorted({d.code for c in choices for d in c.diagnostics
+                        if d.severity == "error"})
         raise ValueError(
             f"no candidate fits local memory "
             f"(L = {acc.L} words on {acc.name}); smallest candidate needs "
             f"{min((c.plan.vmem_bytes for c in choices), default=0)} bytes"
+            + (f"; diagnostics: {' '.join(codes)}" if codes else "")
         )
     if measure is None:
         return feasible[0], choices

@@ -106,8 +106,9 @@ class Stream(StreamOwnership):
             raise ValueError("token_size must be positive")
         if self.data.shape[0] % self.token_size != 0:
             raise ValueError(
-                f"stream length {self.data.shape[0]} not divisible by token "
-                f"size {self.token_size}; pad the backing array"
+                f"[BSPS103] stream length {self.data.shape[0]} not divisible "
+                f"by token size {self.token_size}; the tail would silently "
+                f"truncate — pad the backing array"
             )
 
     # -- BSPlib-extension primitives (paper §4) ------------------------------

@@ -337,6 +337,7 @@ def make_cannon_runner(
     machine=None,
     plan: StreamPlan | None = None,
     compiled: bool = True,
+    verify: bool = True,
 ) -> tuple[HyperstepRunner, list[list[Stream]], Any]:
     """Build (but do not run) the Algorithm 2 runner; returns (runner, outs,
     initial state).
@@ -344,7 +345,10 @@ def make_cannon_runner(
     Reusable across runs — repeated ``runner.run(state,
     num_hypersteps=m_blocks**3, compiled=...)`` calls replay the product (and
     in compiled mode reuse the one traced program), which is what the
-    dispatch benchmark times.
+    dispatch benchmark times. ``verify=True`` statically replays the MOVE
+    schedule before the first dispatch (DESIGN.md §9) — the non-injective
+    down-stream maps are legal reuse and pass clean; a corrupted seek
+    schedule raises ``PlanVerificationError`` instead of corrupting C.
     """
     n = a.shape[0]
     if a.shape != (n, n) or b.shape != (n, n):
@@ -374,6 +378,7 @@ def make_cannon_runner(
         on_hyperstep_end=cannon_move_schedule(m_blocks),
         plan=plan,
         machine=machine,
+        verify=verify,
     )
     return runner, outs, state0
 

@@ -67,6 +67,7 @@ __all__ = [
     "PARAM_RULES",
     "CACHE_RULES",
     "host_h_relation",
+    "host_pricing_diagnostics",
     "spec_uses_axis",
 ]
 
@@ -367,3 +368,20 @@ def host_h_relation(mesh: Any, spec_tree: Any, shape_tree: Any,
         "h_words": h_words,
         "supersteps": 3.0,
     }
+
+
+def host_pricing_diagnostics(plan: Any, mesh: Any, spec_tree: Any,
+                             shape_tree: Any, *, host_axis: str = "host"):
+    """Cross-check a plan's declared host pricing against resolved specs.
+
+    Resolves :func:`host_h_relation` for ``(mesh, spec_tree, shape_tree)``
+    and hands it to :func:`repro.core.verify.verify_plan`, returning the
+    pricing-consistency diagnostics (``BSPS161`` when the plan's declared
+    ``host_comm_words``/``host_supersteps`` disagree with what the specs
+    imply by more than the tolerance). Empty list means the declaration
+    and the sharding table tell the same story.
+    """
+    from repro.core.verify import verify_plan
+
+    rel = host_h_relation(mesh, spec_tree, shape_tree, host_axis=host_axis)
+    return [d for d in verify_plan(plan, host_h=rel) if d.code == "BSPS161"]

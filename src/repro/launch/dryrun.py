@@ -238,6 +238,9 @@ def stream_plan_report(
             "predicted_seconds": best.predicted_seconds,
             "vmem_bytes": best.plan.vmem_bytes,
             "bandwidth_heavy": best.plan.bandwidth_heavy(acc, exact=False),
+            # static verifier findings for the chosen plan (DESIGN.md §9) —
+            # dryrun output doubles as a lint report for the cell's hot-spots
+            "diagnostics": [d.format() for d in best.diagnostics],
         }
 
     report: dict[str, Any] = {}
@@ -299,6 +302,7 @@ def run_cell(
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
+    plans = stream_plan_report(cfg, shape, chips=chips)
     rec: dict[str, Any] = {
         "arch": arch, "shape": shape_name,
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
@@ -307,7 +311,11 @@ def run_cell(
         "overrides": overrides or {},
         # cost-model side of the predicted-vs-measured table: planner-chosen
         # block sizes + Eq. 1 predictions for one chip's slice of the cell
-        "stream_plans": stream_plan_report(cfg, shape, chips=chips),
+        "stream_plans": plans,
+        # flattened verifier findings across the cell's hot-spot plans —
+        # empty means every chosen plan passed static verification
+        "plan_diagnostics": sorted(
+            {line for hs in plans.values() for line in hs.get("diagnostics", ())}),
     }
 
     t0 = time.time()

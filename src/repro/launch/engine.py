@@ -263,7 +263,8 @@ class ServeEngine:
                  pool_seq: int = 128, segment_len: int = 8,
                  page_tokens: int = 8, num_pages: int | None = None,
                  temperature: float = 0.0,
-                 machine: BSPAccelerator | None = None):
+                 machine: BSPAccelerator | None = None,
+                 verify: bool = True):
         if any(b.mixer != "attn" for b in cfg.pattern):
             raise ValueError(
                 f"ServeEngine needs an attention-only stack; {cfg.name} has "
@@ -301,9 +302,13 @@ class ServeEngine:
         self._streams = StreamSet()
         self.lane_streams = self._streams.create_lanes(
             self.segment_len, max_lanes, name="lane")
+        # verify=True statically checks each segment before dispatch
+        # (DESIGN.md §9: lane-aliased up-streams, cursor overruns); results
+        # are memoized per cursor state, so steady-state segments — which
+        # rewind the same lane cursors — pay one set lookup, not a re-walk
         self._runner = HyperstepRunner(
             self._make_step(), [], out_streams=self.lane_streams,
-            machine=self.machine)
+            machine=self.machine, verify=verify)
         self._runner.compile(self.segment_len, donate=False)
 
         # Eq. 1 bookkeeping for the admission plans

@@ -68,6 +68,10 @@ class Registry:
         with self._lock:
             return list(self._entries)
 
+    def __iter__(self) -> Iterator[Hashable]:
+        # iterate over a snapshot: entries may be built/evicted concurrently
+        return iter(self.keys())
+
     @contextmanager
     def acquire(self, key: Hashable,
                 build: Callable[[], Any]) -> Iterator[RegistryEntry]:

@@ -116,7 +116,7 @@ def chunked_selective_scan(
     if unroll_time:
         h, ys = h0, []
         for i in range(nc):
-            h, y = chunk_step(h, jax.tree_util.tree_map(lambda t: t[i], xs))
+            h, y = chunk_step(h, jax.tree_util.tree_map(lambda t, i=i: t[i], xs))
             ys.append(y)
         y = jnp.stack(ys, axis=0)
     else:

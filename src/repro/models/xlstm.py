@@ -151,7 +151,8 @@ def mlstm_forward(
     if unroll_time:
         carry, outs = (C0, n0, m0), []
         for i in range(nc):
-            carry, o = _mlstm_chunk_step(carry, jax.tree_util.tree_map(lambda t: t[i], xs))
+            carry, o = _mlstm_chunk_step(
+                carry, jax.tree_util.tree_map(lambda t, i=i: t[i], xs))
             outs.append(o)
         out = jnp.stack(outs, axis=0)
     else:

@@ -315,7 +315,7 @@ def test_concurrent_generate_same_and_different_shapes(tiny):
     assert not errors, errors
     np.testing.assert_array_equal(results["a0"], results["a1"])
     assert results["b0"].shape == (1, 16)
-    key_shapes = {k[2:4] for k in serve.decode_runners.keys()
+    key_shapes = {k[2:4] for k in serve.decode_runners
                   if k[0] == cfg}          # (batch, max_len) per entry
     assert (1, 11) in key_shapes and (1, 16) in key_shapes
 

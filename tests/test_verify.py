@@ -1,0 +1,372 @@
+"""Static plan verification (DESIGN.md §9): every diagnostic code fires on a
+minimal offending plan, the flagship plans verify clean, and the compile/run
+hooks raise before any dispatch.
+
+The contract under test: a BSPS program's declaration fully determines its
+schedule, so schedule bugs — cursor overruns, cross-core up-stream races,
+blown budgets, aliased backings — are findable *before* anything executes.
+"""
+
+import importlib.util
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TPU_V5E_CHIP, HyperstepRunner, StreamSet
+from repro.core.bsp import BSPAccelerator
+from repro.core.plan import (
+    StreamPlan,
+    TokenSpec,
+    enumerate_plans,
+    host_plan,
+    packed_decode_plan,
+)
+from repro.core.verify import (
+    CODES,
+    PlanVerificationError,
+    verify_plan,
+    verify_runner,
+)
+from repro.distributed.cannon import cannon_move_schedule, make_cannon_runner
+
+# small test accelerator: L = 1024 words × 4 B = 4 KiB local-memory budget
+ACC = BSPAccelerator(p=1, g=0.0, l=0.0, r=1e9, e=4.0,
+                     L=1024, E=1 << 30, word_bytes=4, name="test-acc")
+
+_EXAMPLES = pathlib.Path(__file__).resolve().parents[1] / "examples"
+
+
+def _load_example(stem):
+    spec = importlib.util.spec_from_file_location(stem, _EXAMPLES / f"{stem}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _codes(diags):
+    return [d.code for d in diags]
+
+
+def _simple_runner(n_tok=8, token=4, **kw):
+    ss = StreamSet()
+    s = ss.create(np.zeros(n_tok * token, np.float32), token, name="v")
+    return HyperstepRunner(lambda a, t: a + float(np.sum(t[0])), [s], **kw)
+
+
+# ------------------------------------------------- schedule safety (10x) ----
+
+
+def test_bsps101_seek_out_of_range():
+    runner = _simple_runner(n_tok=4, on_hyperstep_end=lambda h, ss: ss[0].seek(0, -3))
+    diags = verify_runner(runner)
+    assert "BSPS101" in _codes(diags)
+    d = next(d for d in diags if d.code == "BSPS101")
+    assert d.severity == "error" and d.stream == "v"
+
+
+def test_bsps102_stream_exhausted():
+    runner = _simple_runner(n_tok=4)
+    diags = verify_runner(runner, num_hypersteps=6)
+    assert "BSPS102" in _codes(diags)
+
+
+def test_bsps102_compile_raises_before_dispatch():
+    runner = _simple_runner(n_tok=4)
+    with pytest.raises(PlanVerificationError) as ei:
+        runner.compile(6)
+    assert "BSPS102" in _codes(ei.value.diagnostics)
+    assert runner.dispatches_run == 0
+
+
+def test_bsps103_stream_construction_rejects_ragged_token():
+    ss = StreamSet()
+    with pytest.raises(ValueError, match=r"\[BSPS103\]"):
+        ss.create(np.zeros(10, np.float32), 4)
+
+
+def test_bsps103_host_plan_rejects_non_dividing_rate():
+    ss = StreamSet()
+    s = ss.create(np.zeros(5 * 4, np.float32).reshape(5, 4), 1, name="x")
+    with pytest.raises(ValueError, match=r"\[BSPS103\]"):
+        host_plan([s], rates=[2], flops_per_hyperstep=1.0)
+
+
+def test_bsps103_runner_warns_on_truncated_tail():
+    runner = _simple_runner(n_tok=8, rates=[3])
+    diags = verify_runner(runner)
+    d = next(d for d in diags if d.code == "BSPS103")
+    assert d.severity == "warn"
+
+
+def test_bsps103_out_every_not_dividing_run():
+    ss = StreamSet()
+    s = ss.create(np.zeros(8 * 4, np.float32), 4, name="v")
+    out = ss.create(np.zeros(8, np.float32), 1, name="y")
+    runner = HyperstepRunner(lambda a, t: a, [s], out_streams=[out],
+                             out_every=[2])
+    diags = verify_runner(runner, num_hypersteps=3)
+    assert "BSPS103" in _codes(diags)
+
+
+def test_bsps104_index_map_outside_full_shape():
+    plan = StreamPlan(
+        name="bad-range", grid=(4,),
+        inputs=(TokenSpec(name="a", block_shape=(4,),
+                          index_map=lambda h: (h,), full_shape=(8,)),),
+        outputs=(), flops_per_hyperstep=1.0)
+    diags = verify_plan(plan)
+    d = next(d for d in diags if d.code == "BSPS104")
+    assert d.hyperstep == 2      # block 2 starts at 8 == full extent
+
+
+def test_bsps104_partial_edge_block_is_legal():
+    # block 3 covers [12, 16) of a 14-element axis: a legal Pallas edge
+    # block (starts inside), not a range error
+    plan = StreamPlan(
+        name="edge", grid=(4,),
+        inputs=(TokenSpec(name="a", block_shape=(4,),
+                          index_map=lambda h: (h,), full_shape=(14,)),),
+        outputs=(), flops_per_hyperstep=1.0)
+    assert "BSPS104" not in _codes(verify_plan(plan))
+
+
+def test_bsps105_opaque_on_hyperstep_end():
+    def bad_hook(h, ss):
+        raise RuntimeError("touches device state")
+
+    runner = _simple_runner(on_hyperstep_end=bad_hook)
+    d = next(d for d in verify_runner(runner) if d.code == "BSPS105")
+    assert d.severity == "info"
+
+
+# ---------------------------------------------------------- races (12x) ----
+
+
+def test_bsps121_cross_core_up_stream_race():
+    ss = StreamSet()
+    ins = [ss.create(np.zeros(16, np.float32), 4, name=f"in{c}")
+           for c in range(2)]
+    shared = ss.create(np.zeros(4, np.float32), 1, name="shared-out")
+    runner = HyperstepRunner(lambda a, t: a, [[s] for s in ins], cores=2,
+                             out_streams=[[shared], [shared]])
+    diags = verify_runner(runner)
+    d = next(d for d in diags if d.code == "BSPS121")
+    assert d.severity == "error" and "core0" in d.message and "core1" in d.message
+
+
+def test_bsps121_distinct_backings_are_clean():
+    ss = StreamSet()
+    ins = [ss.create(np.zeros(16, np.float32), 4, name=f"in{c}")
+           for c in range(2)]
+    outs = [ss.create(np.zeros(4, np.float32), 1, name=f"out{c}")
+            for c in range(2)]
+    runner = HyperstepRunner(lambda a, t: a, [[s] for s in ins], cores=2,
+                             out_streams=[[o] for o in outs])
+    assert "BSPS121" not in _codes(verify_runner(runner))
+
+
+def test_bsps122_output_block_revisited():
+    plan = StreamPlan(
+        name="revisit", grid=(4,),
+        inputs=(),
+        outputs=(TokenSpec(name="y", block_shape=(4,),
+                           index_map=lambda h: ((0, 1, 0, 1)[h],),
+                           full_shape=(8,), direction="up"),),
+        flops_per_hyperstep=1.0)
+    d = next(d for d in verify_plan(plan) if d.code == "BSPS122")
+    assert d.hyperstep == 2      # the walk returns to block 0 here
+
+
+# ------------------------------------------------- budget/aliasing (14x) ----
+
+
+def _one_token_plan(words, *, grid=(4,), index_map=None, out_words=4):
+    return StreamPlan(
+        name="budget", grid=grid,
+        inputs=(TokenSpec(name="a", block_shape=(words,),
+                          index_map=index_map or (lambda h: (h,)),
+                          full_shape=(grid[0] * words,)),),
+        outputs=(TokenSpec(name="y", block_shape=(out_words,),
+                           index_map=lambda h: (h,),
+                           full_shape=(grid[0] * out_words,), direction="up"),),
+        flops_per_hyperstep=1.0)
+
+
+def test_bsps141_per_step_peak_over_budget():
+    # 600-word token double-buffers to 4800 B on steps with a prefetch in
+    # flight — over the 4096 B budget even though each single buffer fits
+    plan = _one_token_plan(600)
+    d = next(d for d in verify_plan(plan, ACC) if d.code == "BSPS141")
+    assert d.severity == "error"
+
+
+def test_bsps143_static_bound_pessimistic_but_peak_fits():
+    # constant index map at rate 1: fits() double-buffers the 600-word token
+    # (4800 B > budget) but no prefetch is ever in flight, so the true
+    # per-step peak fits — an info, not an error
+    plan = _one_token_plan(600, index_map=lambda h: (0,))
+    diags = verify_plan(plan, ACC)
+    assert "BSPS141" not in _codes(diags)
+    d = next(d for d in diags if d.code == "BSPS143")
+    assert d.severity == "info"
+
+
+def test_bsps142_up_stream_aliases_down_stream():
+    ss = StreamSet()
+    s = ss.create(np.zeros(16, np.float32), 4, name="shared")
+    runner = HyperstepRunner(lambda a, t: a, [s], out_streams=[s],
+                             out_every=[1])
+    d = next(d for d in verify_runner(runner, num_hypersteps=2)
+             if d.code == "BSPS142")
+    assert d.severity == "error"
+
+
+def test_verify_false_opts_out():
+    # opted out, the overrun surfaces the old way — an opaque IndexError
+    # from the schedule simulation instead of a structured diagnostic
+    runner = _simple_runner(n_tok=4, verify=False)
+    with pytest.raises(IndexError):
+        runner.compile(6)
+    runner2 = _simple_runner(n_tok=4)
+    with pytest.raises(PlanVerificationError):
+        runner2.compile(6)
+
+
+# ---------------------------------------------- pricing consistency (16x) ----
+
+
+def test_bsps161_declared_host_words_vs_relation():
+    plan = StreamPlan(
+        name="host-priced", grid=(4,),
+        inputs=(TokenSpec(name="a", block_shape=(4,),
+                          index_map=lambda h: (h,), full_shape=(16,)),),
+        outputs=(), flops_per_hyperstep=1.0,
+        host_comm_words_per_hyperstep=100.0,
+        host_supersteps_per_hyperstep=3.0)
+    diags = verify_plan(plan, host_h={"h_words": 250.0, "supersteps": 3.0})
+    d = next(d for d in diags if d.code == "BSPS161")
+    assert d.severity == "warn" and "250" in d.message
+    # agreeing declaration: clean
+    assert "BSPS161" not in _codes(
+        verify_plan(plan, host_h={"h_words": 100.0, "supersteps": 3.0}))
+
+
+def test_host_pricing_diagnostics_helper():
+    import jax
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.shardspec import host_pricing_diagnostics
+
+    plan = StreamPlan(
+        name="host-priced", grid=(2,),
+        inputs=(TokenSpec(name="a", block_shape=(4,),
+                          index_map=lambda h: (h,), full_shape=(8,)),),
+        outputs=(), flops_per_hyperstep=1.0,
+        host_comm_words_per_hyperstep=64.0)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("host",))
+    # single host: the relation implies 0 host words, the plan declares 64
+    diags = host_pricing_diagnostics(
+        plan, mesh, [P("host")], [jnp.zeros((8, 8))])
+    assert _codes(diags) == ["BSPS161"]
+
+
+def test_bsps162_verdict_flips_exact_vs_closed_form():
+    # A is reused across j (map ignores j): exact fetch is half the closed
+    # form's; pick flops between the two verdicts so the pricing flips
+    plan = StreamPlan(
+        name="reuse", grid=(2, 2),
+        inputs=(TokenSpec(name="a", block_shape=(256,),
+                          index_map=lambda i, j: (i,), full_shape=(512,)),),
+        outputs=(),
+        flops_per_hyperstep=700.0)
+    assert plan.bandwidth_heavy(ACC, exact=False) != plan.bandwidth_heavy(
+        ACC, exact=True)
+    d = next(d for d in verify_plan(plan, ACC) if d.code == "BSPS162")
+    assert d.severity == "warn"
+
+
+# -------------------------------------------------- planner integration ----
+
+
+def test_enumerate_plans_attaches_diagnostics():
+    def build(words):
+        return _one_token_plan(words)
+
+    choices = enumerate_plans(build, [{"words": 16}, {"words": 600}], ACC)
+    by_words = {c.params["words"]: c for c in choices}
+    assert by_words[16].feasible and not by_words[16].diagnostics
+    assert not by_words[600].feasible
+    assert "BSPS141" in [d.code for d in by_words[600].diagnostics]
+    assert "BSPS141" in by_words[600].row()["diagnostics"]
+
+
+# -------------------------------------------------------- flagship plans ----
+
+
+def test_cannon_verifies_clean():
+    m_blocks = 2
+    a = np.arange(256, dtype=np.float32).reshape(16, 16)
+    runner, _, _ = make_cannon_runner(a, a, m_blocks, machine=TPU_V5E_CHIP)
+    diags = verify_runner(runner, num_hypersteps=m_blocks ** 3)
+    assert diags == []
+
+
+def test_cannon_corrupted_seek_schedule_raises_before_dispatch():
+    m_blocks = 2
+    a = np.arange(256, dtype=np.float32).reshape(16, 16)
+    runner, _, state0 = make_cannon_runner(a, a, m_blocks,
+                                           machine=TPU_V5E_CHIP)
+    good = cannon_move_schedule(m_blocks)
+
+    def corrupted(m, per_core):
+        good(m, per_core)
+        if m == 3:                           # one extra bogus MOVE rewind
+            for core, (sa, sb) in enumerate(per_core):
+                sa.seek(core, -50)
+
+    runner._on_end = corrupted
+    diags = verify_runner(runner, num_hypersteps=m_blocks ** 3)
+    assert "BSPS101" in _codes(diags)
+    with pytest.raises(PlanVerificationError):
+        runner.run(state0, num_hypersteps=m_blocks ** 3, compiled=True)
+    assert runner.dispatches_run == 0
+
+
+def test_spmv_verifies_clean():
+    spmv = _load_example("bsps_spmv")
+    cols, vals, x = spmv.make_ell_blocks(64, 0.1, block_rows=16)
+    runner, _, _ = spmv.make_spmv_runner(cols, vals, x)
+    assert [d for d in verify_runner(runner) if d.severity == "error"] == []
+
+
+def test_packed_decode_plan_verifies_clean():
+    plan = packed_decode_plan(lanes=4, steps=16, flops_per_token=2e6,
+                              params_words=1 << 16, kv_words_per_lane=4096.0)
+    diags = verify_plan(plan, TPU_V5E_CHIP)
+    assert [d for d in diags if d.severity == "error"] == []
+
+
+def test_packed_decode_lane_aliased_up_streams_flagged():
+    ss = StreamSet()
+    s_in = ss.create(np.zeros(64, np.float32), 4, name="kv")
+    lanes = ss.create_lanes(16, 2)
+    # lane 1's slot mistakenly points at lane 0's stream — both write the
+    # same generated-ids backing every hyperstep
+    runner = HyperstepRunner(lambda a, t: a, [s_in],
+                             out_streams=[lanes[0], lanes[0]])
+    diags = verify_runner(runner, num_hypersteps=4)
+    assert "BSPS121" in _codes(diags)
+    # correctly wired lanes (one backing each) verify clean
+    clean = HyperstepRunner(lambda a, t: a, [s_in],
+                            out_streams=[lanes[0], lanes[1]])
+    assert "BSPS121" not in _codes(verify_runner(clean, num_hypersteps=4))
+
+
+def test_all_codes_documented():
+    from repro.core.verify import SEVERITY
+
+    assert set(CODES) == set(SEVERITY)
+    assert len(CODES) >= 8
