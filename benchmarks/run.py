@@ -9,6 +9,7 @@ Prints ``name,value,derived`` CSV per the repo convention. Modules:
   roofline_table   — assignment §Roofline (from recorded dry-run artifacts)
   bsps_bench       — host-loop vs compiled dispatch (writes BENCH_dispatch.json)
   serve_batch      — continuous-batching serve engine (writes BENCH_serve_batch.json)
+  chaos_serve      — fault-injected serve + crash-resume train (writes BENCH_chaos.json)
   multihost        — third pricing level: per-level rows + scalability curves
                      (writes BENCH_multihost.json; needs >= 8 forced devices)
 
@@ -23,6 +24,7 @@ import traceback
 from benchmarks import (
     bsps_bench,
     cannon_crossover,
+    chaos_serve,
     inner_product,
     mem_speeds,
     multihost,
@@ -41,6 +43,7 @@ MODULES = {
     "roofline_table": roofline_table,
     "bsps_bench": bsps_bench,
     "serve_batch": serve_batch,
+    "chaos_serve": chaos_serve,
     "multihost": multihost,
 }
 

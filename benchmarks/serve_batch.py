@@ -108,10 +108,14 @@ def _case_batch_sweep(smoke: bool, acc) -> dict:
         for _ in range(3):
             toks, wall = _drain(eng, prompts, steps)
             tps_runs.append(toks / max(wall, 1e-12))
+        stats = eng.stats()
         sweep[batch] = {
             "tokens_per_s": float(np.median(tps_runs)),
             "segments_per_wave": -(-steps // seg),
-            "mean_occupancy": eng.stats()["mean_occupancy"],
+            "mean_occupancy": stats["mean_occupancy"],
+            # runtime BSPS2xx rollup (DESIGN.md §10): a clean sweep shows
+            # zero events; anything else names the code that fired
+            "health": stats["health"],
         }
         if batch == FLOOR_BATCH:
             lat = np.asarray(eng.token_latencies[tok0:])

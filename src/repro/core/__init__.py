@@ -19,6 +19,21 @@ from repro.core.cost import (
     cannon_k_equal,
     inner_product_cost,
 )
+from repro.core.faults import (
+    FAULT_KINDS,
+    FaultInjected,
+    FaultInjector,
+    FaultPlan,
+    FaultRecord,
+    FaultSpec,
+    corrupt_array,
+    fault_signature,
+)
+from repro.core.health import (
+    HEALTH_CODES,
+    HealthEvent,
+    HealthMonitor,
+)
 from repro.core.hyperstep import (
     CompiledHyperstepProgram,
     HyperstepRecord,
@@ -43,6 +58,9 @@ __all__ = [
     "HyperstepCost", "SuperstepCost", "bsp_cost", "bsps_cost",
     "cannon_bsp_cost", "cannon_bsps_cost", "cannon_hyperstep", "cannon_k_equal",
     "inner_product_cost",
+    "FAULT_KINDS", "FaultInjected", "FaultInjector", "FaultPlan",
+    "FaultRecord", "FaultSpec", "corrupt_array", "fault_signature",
+    "HEALTH_CODES", "HealthEvent", "HealthMonitor",
     "CompiledHyperstepProgram", "HyperstepRecord", "HyperstepRunner", "run_bsps",
     "CompiledSchedule", "PlanChoice", "ScratchSpec", "StreamPlan", "TokenSpec",
     "autotune", "enumerate_plans", "host_plan",

@@ -198,6 +198,39 @@ def _prologue(
     return residents, toks, words, time.perf_counter() - t0
 
 
+def _fetch_faulty(
+    streams: Sequence[Stream],
+    rates: Sequence[int],
+    core: int,
+    device: Any | None,
+    inj: Any,
+    g: int,
+) -> tuple[list[Any], float]:
+    """``_fetch`` with an injected DMA stall: the sleep runs *inside* the
+    lane, so the stall is real lane-busy time and the bulk sync feels it."""
+    d = inj.fetch_delay(g, core)
+    if d:
+        time.sleep(d)
+    toks, s = _fetch(streams, rates, core, device)
+    return toks, s + d
+
+
+def _prologue_faulty(
+    streams: Sequence[Stream],
+    rates: Sequence[int],
+    core: int,
+    device: Any | None,
+    inj: Any,
+    g: int,
+) -> tuple[list[Any], list[Any], int, float]:
+    """``_prologue`` with an injected DMA stall on hyperstep 0's staging."""
+    d = inj.fetch_delay(g, core)
+    if d:
+        time.sleep(d)
+    res, toks, words, s = _prologue(streams, rates, core, device)
+    return res, toks, words, s + d
+
+
 def _writeback(
     out_streams: Sequence[Stream], core: int, out_tokens: Sequence[Any]
 ) -> tuple[int, float]:
@@ -390,6 +423,23 @@ class HyperstepRunner:
         dispatch. Verification is memoized per (hyperstep count, cursor
         positions), so hot paths pay a set lookup. ``verify=False`` opts out
         (tests that exercise runtime failure paths).
+    faults:
+        Optional :class:`~repro.core.faults.FaultInjector` (DESIGN.md §10).
+        The runner consults it at its natural seams: before each dispatch
+        (host loop: per hyperstep; compiled: per segment — an injected
+        ``dispatch_fail`` raises :class:`~repro.core.faults.FaultInjected`
+        from :meth:`run` before any state moves), inside each DMA lane's
+        fetch (``dma_stall`` grows the lane-busy time), around the compute
+        (``straggler`` grows the step wall time) and on up-stream tokens at
+        flush time (``corrupt``). Hyperstep-indexed triggers use the
+        *global* hyperstep count, so a host-loop run and a compiled run of
+        the same program produce the same fault trace.
+    health:
+        Optional :class:`~repro.core.health.HealthMonitor`. Each appended
+        aggregate record is scored against its Eq. 1 prediction (pro-rata
+        per hyperstep, plus the mode's dispatch latency) and flushed
+        up-stream tokens are NaN-checked — deviations become BSPS2xx
+        :class:`~repro.core.health.HealthEvent`\\ s on the monitor.
     """
 
     def __init__(
@@ -408,6 +458,8 @@ class HyperstepRunner:
         plan: StreamPlan | None = None,
         machine: BSPAccelerator | None = None,
         verify: bool = True,
+        faults: Any | None = None,
+        health: Any | None = None,
     ) -> None:
         self._step = step
         self._multi = cores is not None
@@ -470,9 +522,17 @@ class HyperstepRunner:
         # execution mode's own barrier count, priced at the machine's l
         # (which calibrate() measures as exactly that per-dispatch latency)
         self.dispatches_run: int = 0
+        # lifetime twins of the two counters above: fault triggers and health
+        # observations are indexed by these, and they survive reset_records()
+        # — a segment engine that resets its per-segment row must still walk
+        # forward through a FaultPlan's hyperstep domain
+        self.lifetime_hypersteps: int = 0
+        self.lifetime_dispatches: int = 0
         self._compiled_cache: dict[int, CompiledHyperstepProgram] = {}
         self._verify_enabled = verify
         self._verified_keys: set[Any] = set()
+        self.faults = faults
+        self.health = health
 
     # -- schedule helpers ----------------------------------------------------
 
@@ -574,6 +634,56 @@ class HyperstepRunner:
         if errors:
             raise PlanVerificationError(errors)
         self._verified_keys.add(key)
+
+    # -- fault injection / health hooks (DESIGN.md §10) ----------------------
+
+    @property
+    def _source_name(self) -> str:
+        return self.plan.name if self.plan is not None else "hyperstep"
+
+    def _predicted_seconds_for(self, total: int, dispatches: int = 1) -> float:
+        """Eq. 1 price of ``total`` hypersteps + ``dispatches`` barriers.
+
+        The health monitor's SLO denominator. Without a plan + machine the
+        fallback is a flat per-hyperstep unit — the monitor's baseline ratio
+        self-normalizes, so only *changes* in per-hyperstep time alarm.
+        """
+        if self.plan is not None and self.machine is not None:
+            per = (self.plan.predicted_seconds(self.machine)
+                   / max(self.plan.num_hypersteps, 1))
+            return per * total + self.machine.flops_to_seconds(
+                self.machine.l * dispatches)
+        return 1e-3 * max(total, 1)
+
+    def _observe(self, total: int, dispatches: int, index: int) -> None:
+        if self.health is None or not self.records:
+            return
+        self.health.observe_record(
+            self.records[-1], self._predicted_seconds_for(total, dispatches),
+            source=self._source_name, index=index)
+
+    def _apply_compiled_corruption(self, sched: _RunSchedule, out_bufs: Any,
+                                   base: int, total: int) -> Any:
+        """Apply compiled-mode ``corrupt`` triggers to the scattered rows."""
+        from repro.core.faults import corrupt_stacked_row
+
+        for h_local, slot, mode, core_sel in self.faults.corrupt_targets(
+                base, total):
+            if slot >= len(self._out_streams[0]):
+                continue
+            if not sched.flush_mask[h_local, slot]:
+                continue
+            for c, core in enumerate(self._core_ids):
+                if core_sel is not None and core != core_sel:
+                    continue
+                row = int(sched.scatter_indices[h_local, c, slot])
+                leaves, tdef = jax.tree_util.tree_flatten(out_bufs[c][slot])
+                for li, leaf in enumerate(leaves):
+                    if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+                        leaves[li] = corrupt_stacked_row(leaf, row, mode)
+                        break
+                out_bufs[c][slot] = jax.tree_util.tree_unflatten(tdef, leaves)
+        return out_bufs
 
     # -- compiled mode -------------------------------------------------------
 
@@ -758,6 +868,11 @@ class HyperstepRunner:
         if total <= 0:
             return state
         self._verify_or_raise(total)
+        base = self.lifetime_hypersteps
+        if self.faults is not None:
+            # simulated preemption: raises before any stream opens or state
+            # moves, so the caller may retry the dispatch verbatim
+            self.faults.on_dispatch()
         prog = self._compiled_cache.get(total)
         if prog is not None and not self._schedule_current(prog.schedule):
             # segment-boundary rejoin: the streams stand at a different cursor
@@ -783,13 +898,34 @@ class HyperstepRunner:
                         for outs in self._out_streams]
             stacked = _block(stacked)
             out_bufs = _block(out_bufs)
+            if self.faults is not None:
+                # the whole run stages at once, so every dma_stall trigger in
+                # range lands on this one link crossing
+                d = sum(self.faults.fetch_delay(g)
+                        for g in range(base, base + total))
+                if d:
+                    time.sleep(d)
             stage_s = time.perf_counter() - t0
 
             t1 = time.perf_counter()
             state, out_bufs = prog(state, out_bufs, stacked)
             state = _block(state)
             out_bufs = _block(out_bufs)
+            if self.faults is not None:
+                d = sum(self.faults.compute_delay(g)
+                        for g in range(base, base + total))
+                if d:
+                    time.sleep(d)
             run_s = time.perf_counter() - t1
+
+            if self.faults is not None:
+                out_bufs = self._apply_compiled_corruption(
+                    sched, out_bufs, base, total)
+            if self.health is not None:
+                for c in range(self.num_cores):
+                    for j, buf in enumerate(out_bufs[c]):
+                        self.health.check_output(
+                            buf, source=self._source_name, index=base)
 
             # drain the finished output tokens back to external memory and
             # advance the cursors to the walk's final positions (so adapter
@@ -841,6 +977,9 @@ class HyperstepRunner:
         ))
         self.hypersteps_run += total
         self.dispatches_run += 1
+        self.lifetime_hypersteps += total
+        self.lifetime_dispatches += 1
+        self._observe(total, 1, self.lifetime_dispatches - 1)
         return state
 
     def run(self, state: Any, num_hypersteps: int | None = None, *,
@@ -894,17 +1033,27 @@ class HyperstepRunner:
             if total <= 0:
                 return state
             self._verify_or_raise(total)
+            inj = self.faults
+            base = self.lifetime_hypersteps
 
             # Hyperstep 0's tokens are assumed resident at program start
             # (paper §2); rate-0 operands are fetched here, once, and reused.
             # Each core's prologue runs on its own DMA lane; the words and
             # lane-busy time land in record 0's initial_fetch_* fields so the
             # measured fetch totals match the plan's arrival-0 charge.
-            pro_futs = [
-                dma.submit(_prologue, ss, self._rates, core, self._device)
-                for dma, ss, core in zip(self._dma, self._streams,
-                                         self._core_ids)
-            ]
+            if inj is not None:
+                pro_futs = [
+                    dma.submit(_prologue_faulty, ss, self._rates, core,
+                               self._device, inj, base)
+                    for dma, ss, core in zip(self._dma, self._streams,
+                                             self._core_ids)
+                ]
+            else:
+                pro_futs = [
+                    dma.submit(_prologue, ss, self._rates, core, self._device)
+                    for dma, ss, core in zip(self._dma, self._streams,
+                                             self._core_ids)
+                ]
             pro = [f.result() for f in pro_futs]
             residents = [p[0] for p in pro]
             init_stats = [(p[2], p[3]) for p in pro]
@@ -921,19 +1070,36 @@ class HyperstepRunner:
             n_out = len(self._out_streams[0])
 
             for h in range(total):
+                if inj is not None:
+                    # host-loop dispatch = one jit call per hyperstep; an
+                    # injected preemption raises here, before this step's
+                    # compute or cursor motion (the finally rewinds streams)
+                    inj.on_dispatch()
                 t0 = time.perf_counter()
                 last = h == total - 1
                 futs: list[Future] | None = None
                 if not last:
                     if self._prefetch:
-                        futs = [
-                            dma.submit(_fetch, ss, self._rates, core,
-                                       self._device)
-                            for dma, ss, core in zip(self._dma, self._streams,
-                                                     self._core_ids)
-                        ]
+                        if inj is not None:
+                            futs = [
+                                dma.submit(_fetch_faulty, ss, self._rates,
+                                           core, self._device, inj,
+                                           base + h + 1)
+                                for dma, ss, core in zip(
+                                    self._dma, self._streams, self._core_ids)
+                            ]
+                        else:
+                            futs = [
+                                dma.submit(_fetch, ss, self._rates, core,
+                                           self._device)
+                                for dma, ss, core in zip(
+                                    self._dma, self._streams, self._core_ids)
+                            ]
                     else:
                         nxts = [
+                            _fetch_faulty(ss, self._rates, core, self._device,
+                                          inj, base + h + 1)
+                            if inj is not None else
                             _fetch(ss, self._rates, core, self._device)
                             for ss, core in zip(self._streams, self._core_ids)
                         ]
@@ -948,6 +1114,10 @@ class HyperstepRunner:
                     # the bulk sync doubles as the timing fence; without
                     # records the dispatches may pipeline freely
                     state = _block(state)
+                if inj is not None:
+                    d = inj.compute_delay(base + h)
+                    if d:
+                        time.sleep(d)  # straggler: the core, not the link
                 compute_s = time.perf_counter() - t_c
 
                 wait_s = 0.0
@@ -971,6 +1141,18 @@ class HyperstepRunner:
                 flush = [(h + 1) % e == 0 for e in self._out_every]
                 wb_now = [(0, 0.0)] * ncores
                 if n_out and any(flush):
+                    if inj is not None:
+                        out_tokens = [
+                            inj.corrupt_token(base + h, j, tok)
+                            if flush[j] and tok is not None else tok
+                            for j, tok in enumerate(out_tokens)
+                        ]
+                    if self.health is not None:
+                        for j, tok in enumerate(out_tokens):
+                            if flush[j] and tok is not None:
+                                self.health.check_output(
+                                    tok, source=self._source_name,
+                                    index=base + h)
                     per_core_out = self._per_core_out(out_tokens)
                     if self._prefetch:
                         # absolute index: records accumulate across run() calls
@@ -1028,6 +1210,9 @@ class HyperstepRunner:
                 ))
                 self.hypersteps_run += 1
                 self.dispatches_run += 1
+                self.lifetime_hypersteps += 1
+                self.lifetime_dispatches += 1
+                self._observe(1, 1, base + h)
                 if self._on_end and not last:
                     # Cursor adjustments (seek/MOVE) for the *following* fetch.
                     self._on_end(h + 1, self._on_end_arg())

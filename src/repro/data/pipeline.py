@@ -17,13 +17,15 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Any, Iterator
 
 import numpy as np
 
 from repro.core.stream import StreamOwnership
 
-__all__ = ["DataConfig", "TokenStream", "BatchStream", "Prefetcher"]
+__all__ = ["DataConfig", "DataSourceError", "TokenStream", "BatchStream",
+           "Prefetcher"]
 
 
 @dataclasses.dataclass
@@ -35,14 +37,47 @@ class DataConfig:
     seed: int = 0
     host_index: int = 0
     host_count: int = 1
+    # bounded retry-with-backoff on source reads (DESIGN.md §10): a read of
+    # batch i gets read_retries retries, sleeping backoff * 2^attempt between
+    read_retries: int = 2
+    retry_backoff_s: float = 0.01
+
+
+class DataSourceError(RuntimeError):
+    """A data-source read failed past its retry budget.
+
+    Carries the failing batch (shard) index, so the consumer knows exactly
+    which read to investigate or re-drive — this is what a prefetch thread
+    surfaces instead of dying silently.
+    """
+
+    def __init__(self, batch_index: int, cause: BaseException | None = None):
+        msg = f"data source failed at batch index {batch_index}"
+        if cause is not None:
+            msg += f": {cause!r}"
+        super().__init__(msg)
+        self.batch_index = int(batch_index)
+        self.cause = cause
 
 
 class TokenStream:
-    """Stateful, seekable batch stream. State = one integer cursor."""
+    """Stateful, seekable batch stream. State = one integer cursor.
 
-    def __init__(self, cfg: DataConfig):
+    ``faults`` is an optional :class:`~repro.core.faults.FaultInjector` whose
+    ``data_error`` triggers fire on batch reads; ``health`` an optional
+    :class:`~repro.core.health.HealthMonitor` that receives BSPS210 (read
+    retried) / BSPS211 (retries exhausted) events. Every read goes through
+    the bounded retry of :meth:`_read_with_retry`.
+    """
+
+    def __init__(self, cfg: DataConfig, *, faults: Any | None = None,
+                 health: Any | None = None):
         self.cfg = cfg
+        self.faults = faults
+        self.health = health
+        self.retry_log: list[tuple[int, int]] = []   # (batch index, attempt)
         self._cursor = cfg.host_index
+        self._producer: _PrefetchProducer | None = None
         self._data: np.memmap | None = None
         if cfg.source != "synthetic":
             self._data = np.memmap(cfg.source, dtype=np.uint32, mode="r")
@@ -59,6 +94,11 @@ class TokenStream:
 
     def seek(self, cursor: int) -> None:
         self._cursor = int(cursor)
+        if self._producer is not None:
+            # the lookahead was built from the old cursor: flush + restart
+            depth = self._producer.depth
+            self.stop_prefetch()
+            self.start_prefetch(depth)
 
     def state_dict(self) -> dict[str, Any]:
         return {"cursor": self._cursor, "seed": self.cfg.seed}
@@ -75,12 +115,71 @@ class TokenStream:
                 "seed": self.cfg.seed}
 
     def load_state_dict(self, state: dict[str, Any]) -> None:
-        self._cursor = int(state["cursor"])
+        self.seek(int(state["cursor"]))
 
     def next_batch(self) -> dict[str, np.ndarray]:
-        batch = self._make(self._cursor)
+        if self._producer is not None:
+            index, item = self._producer.q.get()
+            if isinstance(item, BaseException):
+                raise item
+            self._cursor = index + self.cfg.host_count
+            return item
+        batch = self._read_with_retry(self._cursor)
         self._cursor += self.cfg.host_count
         return batch
+
+    def _read_with_retry(self, index: int) -> dict[str, np.ndarray]:
+        """One guarded batch read: ``read_retries`` retries with backoff.
+
+        Injected ``data_error`` faults and real source errors retry alike;
+        exhaustion raises :class:`DataSourceError` carrying the failing batch
+        index. Each retry is logged (``retry_log``) and reported to the
+        health monitor (BSPS210; BSPS211 on exhaustion) when one is attached.
+        """
+        c = self.cfg
+        last: BaseException | None = None
+        for attempt in range(c.read_retries + 1):
+            try:
+                if self.faults is not None:
+                    self.faults.data_error(index)
+                return self._make(index)
+            except Exception as e:          # noqa: BLE001 — retried, then surfaced
+                last = e
+                self.retry_log.append((index, attempt))
+                if self.health is not None:
+                    self.health.emit(
+                        "BSPS210", f"data read failed at batch {index} "
+                        f"(attempt {attempt + 1}): {e}", index=index)
+                if attempt < c.read_retries:
+                    time.sleep(c.retry_backoff_s * (2 ** attempt))
+        if self.health is not None:
+            self.health.emit(
+                "BSPS211", f"data read retries exhausted at batch {index}",
+                index=index)
+        raise DataSourceError(index, last)
+
+    # -- prefetch deepening (the BSPS202 response) --------------------------
+
+    def start_prefetch(self, depth: int = 4) -> None:
+        """Run reads ``depth`` batches ahead on a background producer.
+
+        The runtime response to fetch-wait-dominant hypersteps (BSPS202):
+        deepening the fetch pipeline re-tunes the effective block size
+        without touching the consumer protocol — :meth:`next_batch` still
+        returns batches in cursor order, and a failed read surfaces as
+        :class:`DataSourceError` on the consumer side, never a hang.
+        """
+        if self._producer is None:
+            self._producer = _PrefetchProducer(self, max(1, int(depth)))
+
+    def stop_prefetch(self) -> None:
+        if self._producer is not None:
+            self._producer.close()
+            self._producer = None
+
+    @property
+    def prefetch_depth(self) -> int:
+        return 0 if self._producer is None else self._producer.depth
 
     def _make(self, index: int) -> dict[str, np.ndarray]:
         c = self.cfg
@@ -99,6 +198,52 @@ class TokenStream:
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         while True:
             yield self.next_batch()
+
+
+class _PrefetchProducer:
+    """The background half of :meth:`TokenStream.start_prefetch`.
+
+    Items on the queue are ``(batch index, batch-or-exception)`` — an
+    exception item is the *last* item the producer enqueues, so the consumer
+    raises it from ``next_batch`` instead of blocking on an empty queue
+    behind a dead thread.
+    """
+
+    def __init__(self, stream: TokenStream, depth: int):
+        self.depth = depth
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stream = stream
+        self._next = stream.cursor
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="bsps-data-prefetch")
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            index = self._next
+            try:
+                item: Any = self._stream._read_with_retry(index)
+            except BaseException as e:      # noqa: BLE001 — surfaced to consumer
+                item = e
+            self._next += self._stream.cfg.host_count
+            while not self._stop.is_set():
+                try:
+                    self.q.put((index, item), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if isinstance(item, BaseException):
+                return
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
 
 
 class BatchStream(StreamOwnership):
@@ -167,7 +312,8 @@ class BatchStream(StreamOwnership):
         """
         hc = self._stream.cfg.host_count
         base = self._stream.cursor - self._cursor * hc
-        batches = [self._stream._make(base + i * hc) for i in range(self._num)]
+        batches = [self._stream._read_with_retry(base + i * hc)
+                   for i in range(self._num)]
         return {k: np.stack([np.asarray(b[k]) for b in batches])
                 for k in batches[0]}
 
@@ -218,7 +364,21 @@ class Prefetcher:
 
     def _run(self) -> None:
         while not self._stop.is_set():
-            batch = self._put(self._stream.next_batch())
+            index = self._stream.cursor
+            try:
+                batch: Any = self._put(self._stream.next_batch())
+            except BaseException as e:      # noqa: BLE001 — surfaced to consumer
+                # surface the failure (with its shard index) on the consumer
+                # side rather than dying silently and hanging get() forever
+                if not isinstance(e, DataSourceError):
+                    e = DataSourceError(index, e)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(e, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                return
             while not self._stop.is_set():
                 try:
                     self._q.put(batch, timeout=0.1)
@@ -227,7 +387,10 @@ class Prefetcher:
                     continue
 
     def get(self) -> dict[str, Any]:
-        return self._q.get()
+        item = self._q.get()
+        if isinstance(item, BaseException):
+            raise item
+        return item
 
     def close(self) -> None:
         self._stop.set()

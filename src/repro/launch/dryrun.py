@@ -44,6 +44,7 @@ from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core import plan as planlib
 from repro.core import roofline as rf
 from repro.core.bsp import TPU_V5E_CHIP, BSPAccelerator
+from repro.core.health import HealthMonitor
 from repro.core.hlo import collective_bytes, fused_bytes
 from repro.distributed import ctx
 from repro.distributed import sharding as sh
@@ -212,7 +213,7 @@ def _round_up(x: int, to: int) -> int:
 
 def stream_plan_report(
     cfg: ModelConfig, shape: ShapeSpec, acc: BSPAccelerator = TPU_V5E_CHIP,
-    *, chips: int = 1,
+    *, chips: int = 1, health: Any = None,
 ) -> dict[str, Any]:
     """Chip-level StreamPlans for the cell's kernel hot-spots.
 
@@ -233,6 +234,10 @@ def stream_plan_report(
         # closed-form scoring: production-shaped grids make the exact fetch
         # enumeration cost seconds per candidate for no ranking benefit
         best, _ = planlib.autotune(build, candidates, acc, exact=False)
+        if health is not None:
+            # fold verifier findings into the shared BSPS rollup so the
+            # dry-run record speaks the same code vocabulary as live stats
+            health.ingest_diagnostics(best.diagnostics)
         return {
             **best.params,
             "predicted_seconds": best.predicted_seconds,
@@ -302,7 +307,8 @@ def run_cell(
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    plans = stream_plan_report(cfg, shape, chips=chips)
+    health = HealthMonitor(name=f"dryrun_{arch}_{shape_name}")
+    plans = stream_plan_report(cfg, shape, chips=chips, health=health)
     rec: dict[str, Any] = {
         "arch": arch, "shape": shape_name,
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
@@ -316,6 +322,9 @@ def run_cell(
         # empty means every chosen plan passed static verification
         "plan_diagnostics": sorted(
             {line for hs in plans.values() for line in hs.get("diagnostics", ())}),
+        # static findings rolled up by BSPS code, same shape as
+        # ServeEngine.stats()["health"] / train() result["health"]
+        "health": health.rollup(),
     }
 
     t0 = time.time()

@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.core.bsp import BSPAccelerator
 from repro.core.calibrate import default_machine
+from repro.core.faults import FaultInjected
+from repro.core.health import HealthMonitor
 from repro.core.hyperstep import HyperstepRunner
 from repro.core.plan import (
     AdmissionDecision,
@@ -74,6 +76,7 @@ class Request:
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int
     seed: int = 0
+    deadline_s: float | None = None     # wall budget from submit; None = none
 
     lane: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
@@ -81,6 +84,8 @@ class Request:
     submit_time: float = 0.0
     join_time: float | None = None
     done_time: float | None = None
+    timed_out: bool = False
+    cancelled: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -166,7 +171,9 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg, max_lanes: int, pool_seq: int, *,
-                 page_tokens: int = 8, num_pages: int | None = None):
+                 page_tokens: int = 8, num_pages: int | None = None,
+                 faults: Any | None = None):
+        self.faults = faults
         self.cfg = cfg
         self.max_lanes = int(max_lanes)
         self.pool_seq = int(pool_seq)
@@ -184,6 +191,14 @@ class PagedKVPool:
 
     def lane_lens(self) -> np.ndarray:
         return np.asarray(self.cache["len"], np.int32)
+
+    def can_admit(self, tokens: int) -> bool:
+        """Admission pre-check: a free lane, enough pages, and no injected
+        exhaustion (an injected ``page_exhaust`` fault makes the pool report
+        full for this one consultation — DESIGN.md §10)."""
+        if self.faults is not None and self.faults.page_fault():
+            return False
+        return bool(self._free_lanes) and self.table.can_alloc(tokens)
 
     def try_admit(self, rid: int, tokens: int) -> tuple[int, list[int]] | None:
         """Claim a lane + pages for ``tokens`` positions, or None if full."""
@@ -257,6 +272,25 @@ class ServeEngine:
     temperature:
         0 = greedy (the packed-vs-sequential equivalence mode); > 0 samples
         per lane with a per-request PRNG key.
+    faults:
+        Optional :class:`~repro.core.faults.FaultInjector` threaded through
+        the runner (dispatch failures, stalls, corruption) and the page pool
+        (injected exhaustion) — DESIGN.md §10.
+    slo_band / slo_warmup:
+        The Eq. 1 SLO band the :class:`~repro.core.health.HealthMonitor`
+        scores each segment against (relative to the warmup baseline ratio).
+        The default is deliberately wide — occupancy changes move the
+        prediction more than the wall time at toy scales; tighten it when
+        chasing real regressions.
+    degrade_after / recover_after:
+        Degradation state machine (DESIGN.md §10): ``degrade_after``
+        consecutive SLO-violating segments enter degraded mode (admissions
+        shed while lanes are busy; admission re-priced against the measured
+        slowdown), ``recover_after`` consecutive healthy segments exit it.
+    dispatch_retries / retry_backoff_s:
+        Bounded retry on a failed segment dispatch (simulated preemption):
+        up to ``dispatch_retries`` retries with exponential backoff before
+        the failure propagates out of :meth:`step_segment`.
     """
 
     def __init__(self, cfg, params, *, max_lanes: int = 4,
@@ -264,7 +298,12 @@ class ServeEngine:
                  page_tokens: int = 8, num_pages: int | None = None,
                  temperature: float = 0.0,
                  machine: BSPAccelerator | None = None,
-                 verify: bool = True):
+                 verify: bool = True,
+                 faults: Any | None = None,
+                 slo_band: tuple[float, float] = (0.05, 20.0),
+                 slo_warmup: int = 2,
+                 degrade_after: int = 2, recover_after: int = 2,
+                 dispatch_retries: int = 3, retry_backoff_s: float = 0.01):
         if any(b.mixer != "attn" for b in cfg.pattern):
             raise ValueError(
                 f"ServeEngine needs an attention-only stack; {cfg.name} has "
@@ -280,9 +319,19 @@ class ServeEngine:
         self.segment_len = int(segment_len)
         self.temperature = float(temperature)
         self.machine = machine or default_machine()
+        self.faults = faults
+        self.health = HealthMonitor(band=slo_band, warmup=slo_warmup,
+                                    name=f"engine_{cfg.name}")
+        self.degraded = False
+        self._degrade_after = int(degrade_after)
+        self._recover_after = int(recover_after)
+        self._dispatch_retries = int(dispatch_retries)
+        self._retry_backoff_s = float(retry_backoff_s)
+        self._slo_scale = 1.0        # measured slowdown while degraded
 
         self.pool = PagedKVPool(cfg, max_lanes, pool_seq,
-                                page_tokens=page_tokens, num_pages=num_pages)
+                                page_tokens=page_tokens, num_pages=num_pages,
+                                faults=faults)
         self.queue: deque[Request] = deque()
         self.running: dict[int, Request] = {}     # rid -> request (has a lane)
         self.finished: dict[int, Request] = {}
@@ -308,7 +357,8 @@ class ServeEngine:
         # rewind the same lane cursors — pay one set lookup, not a re-walk
         self._runner = HyperstepRunner(
             self._make_step(), [], out_streams=self.lane_streams,
-            machine=self.machine, verify=verify)
+            machine=self.machine, verify=verify, faults=faults,
+            health=self.health)
         self._runner.compile(self.segment_len, donate=False)
 
         # Eq. 1 bookkeeping for the admission plans
@@ -350,8 +400,14 @@ class ServeEngine:
 
     # -- admission ------------------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int, *, seed: int = 0) -> int:
-        """Queue a request; returns its rid. Joins at a segment boundary."""
+    def submit(self, prompt, max_new_tokens: int, *, seed: int = 0,
+               deadline_s: float | None = None) -> int:
+        """Queue a request; returns its rid. Joins at a segment boundary.
+
+        ``deadline_s`` is a wall-clock budget from submission: a request
+        still unfinished when it expires is retired at the next segment
+        boundary (``timed_out=True``, BSPS205) with whatever tokens it has.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("need a non-empty prompt")
@@ -364,7 +420,8 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens),
-                      seed=seed, submit_time=time.perf_counter())
+                      seed=seed, deadline_s=deadline_s,
+                      submit_time=time.perf_counter())
         self.queue.append(req)
         return rid
 
@@ -400,21 +457,43 @@ class ServeEngine:
             name=f"engine_{self.cfg.name}_B{lanes}",
         )
 
+    def _admission_machine(self) -> BSPAccelerator:
+        """The machine admission prices against — derated while degraded.
+
+        Entering degraded mode re-prices the decode plan with the *measured*
+        slowdown (the SLO ratio that tripped BSPS208) folded into the
+        compute rate: the BSF boundary moves left, so admissions that only
+        paid at healthy speed are refused until the SLO recovers.
+        """
+        if not self.degraded or self._slo_scale <= 1.0:
+            return self.machine
+        return dataclasses.replace(
+            self.machine, r=self.machine.r / self._slo_scale)
+
     def _try_join(self) -> None:
-        """Admit queued requests while Eq. 1 says one more lane still pays."""
+        """Admit queued requests while Eq. 1 says one more lane still pays.
+
+        In degraded mode admissions are shed entirely while any lane is busy
+        (an idle engine still serves — there is nothing left to protect).
+        """
         while self.queue:
             req = self.queue[0]
             occupancy = self._occupancy()
+            if self.degraded and occupancy > 0:
+                break                      # shedding until the SLO recovers
             if self.pool.free_lanes == 0:
                 break
             need = req.prompt_len + self._scheduled_steps(req.max_new_tokens)
-            if not self.pool.table.can_alloc(need):
+            if not self.pool.can_admit(need):
+                self.health.emit(
+                    "BSPS207", f"page pool exhausted; request {req.rid} "
+                    f"deferred (needs {need} positions)", index=req.rid)
                 break                      # page pressure: defer (FCFS)
             current = self._decode_plan(occupancy) if occupancy else None
             candidate = self._decode_plan(occupancy + 1,
                                           extra_len=req.prompt_len)
             dec = admission_decision(
-                current, candidate, self.machine,
+                current, candidate, self._admission_machine(),
                 tokens_per_hyperstep=occupancy + 1)
             self.admission_log.append({
                 "rid": req.rid, "segment": self._segments_run,
@@ -453,10 +532,125 @@ class ServeEngine:
         req.join_time = time.perf_counter()
         self.running[req.rid] = req
 
+    # -- request lifecycle (retire / cancel / deadlines) ----------------------
+
+    def _retire(self, req: Request) -> None:
+        """Free a running request's lane + pages and move it to finished."""
+        self.pool.retire(req.rid, req.lane)
+        self._active[req.lane] = False
+        del self.running[req.rid]
+        self.finished[req.rid] = req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request; returns True if it was queued or running.
+
+        A running request's lane and pages are reclaimed *immediately* — the
+        lane drops out of the active mask, so the next segment decodes
+        nothing for it and a queued request can join in its place at the
+        next boundary. The request lands in ``finished`` with
+        ``cancelled=True`` and whatever tokens it had harvested.
+        """
+        for req in list(self.queue):
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.cancelled = True
+                req.done_time = time.perf_counter()
+                self.finished[rid] = req
+                self.health.emit("BSPS206", f"request {rid} cancelled while "
+                                 "queued", index=rid)
+                return True
+        req = self.running.get(rid)
+        if req is not None:
+            req.cancelled = True
+            req.done_time = time.perf_counter()
+            self._retire(req)
+            self.health.emit("BSPS206", f"request {rid} cancelled; lane "
+                             f"{req.lane} and pages reclaimed", index=rid)
+            return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Retire requests whose wall budget ran out (BSPS205).
+
+        Runs at segment boundaries — the packed dispatch is never interrupted
+        mid-segment, matching the bulk-synchronous contract.
+        """
+        now = time.perf_counter()
+
+        def expired(req: Request) -> bool:
+            return (req.deadline_s is not None
+                    and now - req.submit_time > req.deadline_s)
+
+        for req in list(self.queue):
+            if expired(req):
+                self.queue.remove(req)
+                req.timed_out = True
+                req.done_time = now
+                self.finished[req.rid] = req
+                self.health.emit(
+                    "BSPS205", f"request {req.rid} expired in queue after "
+                    f"{req.deadline_s}s", index=req.rid)
+        for req in list(self.running.values()):
+            if not req.done and expired(req):
+                req.timed_out = True
+                req.done_time = now
+                self._retire(req)
+                self.health.emit(
+                    "BSPS205", f"request {req.rid} exceeded deadline "
+                    f"{req.deadline_s}s with {len(req.generated)}/"
+                    f"{req.max_new_tokens} tokens; retired", index=req.rid)
+
     # -- the segment loop -----------------------------------------------------
+
+    def _dispatch_segment(self, state: Any) -> Any:
+        """One segment dispatch under bounded retry-with-backoff.
+
+        An injected dispatch failure (simulated preemption) raises from the
+        runner *before* any state or cursor moves, so the retry re-runs the
+        identical segment. Retries exhausted → BSPS211 and the failure
+        propagates to the caller.
+        """
+        for attempt in range(self._dispatch_retries + 1):
+            try:
+                return self._runner.run(state, self.segment_len, compiled=True)
+            except FaultInjected as e:
+                self.health.emit(
+                    "BSPS204", f"segment {self._segments_run} dispatch failed "
+                    f"(attempt {attempt + 1}): {e.record.kind}",
+                    index=self._segments_run)
+                if attempt >= self._dispatch_retries:
+                    self.health.emit(
+                        "BSPS211", f"segment {self._segments_run} dispatch "
+                        f"retries exhausted after {attempt + 1} attempts",
+                        index=self._segments_run)
+                    raise
+                time.sleep(self._retry_backoff_s * (2 ** attempt))
+
+    def _update_degradation(self) -> None:
+        """The BSPS208/209 state machine, stepped once per segment."""
+        if (not self.degraded
+                and self.health.consecutive_violations >= self._degrade_after):
+            self.degraded = True
+            self._slo_scale = max(
+                self.health.last_ratio
+                / max(self.health.baseline_ratio, 1e-12), 1.0)
+            self.health.emit(
+                "BSPS208", f"{self.health.consecutive_violations} consecutive "
+                f"SLO violations (last {self._slo_scale:.3g}x baseline); "
+                "shedding admissions and re-pricing the decode plan",
+                index=self._segments_run - 1, value=self._slo_scale)
+        elif (self.degraded
+                and self.health.consecutive_healthy >= self._recover_after):
+            self.degraded = False
+            self._slo_scale = 1.0
+            self.health.emit(
+                "BSPS209", f"SLO recovered after "
+                f"{self.health.consecutive_healthy} healthy segments; "
+                "admissions resume", index=self._segments_run - 1)
 
     def step_segment(self) -> int:
         """Run one packed segment; returns tokens harvested for real requests."""
+        self._expire_deadlines()
         self._try_join()
         occupancy = self._occupancy()
         if occupancy == 0:
@@ -466,7 +660,7 @@ class ServeEngine:
         self._runner.reset_records()
         state = (self.params, self._logits, self.pool.cache, self._keys,
                  jnp.asarray(self._active))
-        state = self._runner.run(state, self.segment_len, compiled=True)
+        state = self._dispatch_segment(state)
         _, self._logits, cache, self._keys, _ = state
         self.pool.cache = dict(cache)
         wall = self._runner.records[-1].step_seconds
@@ -485,16 +679,19 @@ class ServeEngine:
             data = np.asarray(self.lane_streams[req.lane].data, np.int32)
             take = min(self.segment_len,
                        req.max_new_tokens - len(req.generated))
+            # corruption gate: a bit-flipped id is out of vocab range
+            self.health.check_output(
+                data[:take], lo=0, hi=self.cfg.vocab_size,
+                source=f"lane{req.lane}", index=self._segments_run - 1)
             req.generated.extend(int(t) for t in data[:take])
             harvested += take
             self.token_latencies.extend([per_token] * take)
             if req.done:
                 req.done_time = time.perf_counter()
-                self.pool.retire(req.rid, req.lane)
-                self._active[req.lane] = False
-                del self.running[req.rid]
-                self.finished[req.rid] = req
+                self._retire(req)
         self.pool.reset_inactive(self._active)
+        self._update_degradation()
+        self._expire_deadlines()
 
         self.segment_log.append({
             "segment": self._segments_run - 1,
@@ -539,4 +736,10 @@ class ServeEngine:
             "admission_verdict_matches": sum(
                 1 for a in self.admission_log
                 if a["measured_verdict"] == a["verdict"]),
+            "timed_out": sum(
+                1 for r in self.finished.values() if r.timed_out),
+            "cancelled": sum(
+                1 for r in self.finished.values() if r.cancelled),
+            "degraded": self.degraded,
+            "health": self.health.rollup(),
         }

@@ -36,8 +36,9 @@ import numpy as np
 
 from repro.core.stream import StreamOwnership
 
-__all__ = ["save", "restore", "restore_latest", "latest_step", "snapshot",
-           "CheckpointManager", "CheckpointStream"]
+__all__ = ["save", "restore", "restore_latest", "latest_step",
+           "committed_steps", "snapshot", "CheckpointManager",
+           "CheckpointStream"]
 
 
 def _flat(tree: Any) -> dict[str, np.ndarray]:
@@ -106,19 +107,21 @@ def save(
             "arrays": {},
         }
         for group, arrays in host.items():
-            np.savez(os.path.join(tmp, f"{group}.npz"),
-                     **{k: v for k, v in arrays.items()})
+            _write_fsync(os.path.join(tmp, f"{group}.npz"),
+                         lambda f: np.savez(f, **dict(arrays)))
             for k, v in arrays.items():
                 manifest["arrays"][f"{group}/{k}"] = {
                     "crc": zlib.crc32(np.ascontiguousarray(v).tobytes()),
                     "shape": list(v.shape), "dtype": str(v.dtype),
                 }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        _write_fsync(os.path.join(tmp, "manifest.json"),
+                     lambda f: f.write(json.dumps(manifest).encode()))
+        _fsync_dir(tmp)
         if os.path.isdir(final):  # re-save of the same step: replace
             import shutil
             shutil.rmtree(final)
         os.rename(tmp, final)  # the commit point
+        _fsync_dir(directory)   # make the rename itself durable
 
     if blocking:
         _write()
@@ -126,6 +129,33 @@ def save(
     t = threading.Thread(target=_write, daemon=False, name="ckpt-writer")
     t.start()
     return t
+
+
+def _write_fsync(path: str, writer: Callable[[Any], None]) -> None:
+    """Write a file and fsync it before returning (durable pre-commit).
+
+    The atomic-rename commit is only honest if the renamed files are already
+    on disk: rename-then-crash must never leave a committed directory with
+    torn contents.
+    """
+    with open(path, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory entry (no-op on platforms that refuse dir fds)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _retention_gc(directory: str, keep: int) -> None:
@@ -142,15 +172,21 @@ def _retention_gc(directory: str, keep: int) -> None:
                       ignore_errors=True)
 
 
-def latest_step(directory: str) -> int | None:
+def committed_steps(directory: str) -> list[int]:
+    """Committed (renamed, manifest-bearing) checkpoint steps, ascending."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(directory, name, "manifest.json")):
                 steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(
@@ -185,12 +221,26 @@ def restore(
     return out, manifest.get("data_state", {})
 
 
-def restore_latest(directory: str, state_like: dict[str, Any], **kw):
-    step = latest_step(directory)
-    if step is None:
-        return None
-    state, data_state = restore(directory, step, state_like, **kw)
-    return step, state, data_state
+def restore_latest(directory: str, state_like: dict[str, Any], *,
+                   on_corrupt: Callable[[int, Exception], None] | None = None,
+                   **kw):
+    """Restore the newest *valid* checkpoint, falling back past bad ones.
+
+    A corrupted or truncated latest checkpoint (crc mismatch, torn npz,
+    unparsable or missing files) must not brick auto-resume: each failing
+    step is reported through ``on_corrupt(step, error)`` and the next-newest
+    one is tried. Returns ``(step, state, data_state)`` or None when no
+    checkpoint restores cleanly.
+    """
+    for step in reversed(committed_steps(directory)):
+        try:
+            state, data_state = restore(directory, step, state_like, **kw)
+        except Exception as e:  # noqa: BLE001 — any torn artifact falls back
+            if on_corrupt is not None:
+                on_corrupt(step, e)
+            continue
+        return step, state, data_state
+    return None
 
 
 class CheckpointManager:

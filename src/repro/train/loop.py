@@ -50,6 +50,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core.bsp import BSPAccelerator
 from repro.core.calibrate import calibrate, calibrate_host_level
+from repro.core.health import HealthMonitor
 from repro.core.hyperstep import HyperstepRunner
 from repro.core.plan import host_plan
 from repro.core.stream import Stream
@@ -74,6 +75,11 @@ class TrainConfig:
     # path). False: the instrumented per-step host loop (straggler monitor,
     # per-step records, checkpoint I/O overlapped on the DMA lane).
     compiled: bool = True
+    # crash auto-resume (DESIGN.md §10): a crash mid-run restores the latest
+    # valid checkpoint and re-enters, up to max_restarts times (0 = crash
+    # propagates; needs ckpt_dir). Resume is a stream seek, so the replayed
+    # steps are token-for-token identical to an uncrashed run.
+    max_restarts: int = 0
 
 
 class StragglerMonitor:
@@ -140,6 +146,8 @@ def _train_compiled(
     log: Callable[[str], None],
     host_comm_words: float = 0.0,
     host_supersteps: float = 0.0,
+    faults: Any | None = None,
+    health: Any | None = None,
 ) -> tuple[Any, Any, dict[str, float]]:
     """Run training as compiled dispatches, one per checkpoint interval.
 
@@ -188,7 +196,8 @@ def _train_compiled(
             runners[seg] = (
                 HyperstepRunner(hyperstep, [batches],
                                 out_streams=[metrics_out],
-                                plan=plan, machine=machine),
+                                plan=plan, machine=machine,
+                                faults=faults, health=health),
                 metrics_out)
         return runners[seg]
 
@@ -234,8 +243,17 @@ def train(
     machine: BSPAccelerator | None = None,
     mesh: Any | None = None,
     log: Callable[[str], None] = print,
+    faults: Any | None = None,
 ) -> dict[str, Any]:
     """Run (or resume) a training job; returns final state + history.
+
+    ``faults`` is an optional :class:`~repro.core.faults.FaultInjector`
+    threaded through the runner and the data stream (DESIGN.md §10); with
+    ``tcfg.max_restarts > 0`` an injected (or real) crash mid-run restores
+    the latest valid checkpoint and replays — the returned history is
+    token-for-token what an uncrashed run produces. The result carries the
+    run's :class:`~repro.core.health.HealthMonitor` rollup under
+    ``"health"``.
 
     ``machine`` is the :class:`BSPAccelerator` the run is priced on (default:
     a fast host calibration) — the returned ``plan_row`` is the runner's
@@ -256,10 +274,11 @@ def train(
         with mesh, dctx.mesh_axes(dict(mesh.shape)):
             return _train_body(cfg, tcfg, opt, batch_putter=batch_putter,
                                data_cfg=data_cfg, jit_kwargs=jit_kwargs,
-                               machine=machine, mesh=mesh, log=log)
+                               machine=machine, mesh=mesh, log=log,
+                               faults=faults)
     return _train_body(cfg, tcfg, opt, batch_putter=batch_putter,
                        data_cfg=data_cfg, jit_kwargs=jit_kwargs,
-                       machine=machine, mesh=None, log=log)
+                       machine=machine, mesh=None, log=log, faults=faults)
 
 
 def _train_body(
@@ -273,10 +292,16 @@ def _train_body(
     machine: BSPAccelerator | None,
     mesh: Any | None,
     log: Callable[[str], None],
+    faults: Any | None = None,
 ) -> dict[str, Any]:
     data_cfg = data_cfg or DataConfig(
         vocab_size=cfg.vocab_size, seq_len=512, global_batch=8, seed=tcfg.seed)
-    stream = TokenStream(data_cfg)
+    health = HealthMonitor(name=f"train_{cfg.name}")
+    stream = TokenStream(data_cfg, faults=faults, health=health)
+
+    def on_corrupt(step: int, err: Exception) -> None:
+        log(f"[resume] checkpoint step {step} unreadable ({err}); "
+            "falling back")
 
     params = M.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
     opt_state = opt.init(params)
@@ -284,7 +309,8 @@ def _train_body(
 
     if tcfg.ckpt_dir:
         resumed = ckpt.restore_latest(
-            tcfg.ckpt_dir, {"params": params, "opt_state": opt_state})
+            tcfg.ckpt_dir, {"params": params, "opt_state": opt_state},
+            on_corrupt=on_corrupt)
         if resumed is not None:
             start_step, state, data_state = resumed
             params, opt_state = state["params"], state["opt_state"]
@@ -320,7 +346,6 @@ def _train_body(
                       donate_argnums=(0, 1), **(jit_kwargs or {}))
     monitor = StragglerMonitor()
     history: list[dict[str, float]] = []
-    steps_left = tcfg.steps - start_step
     plan_row: dict[str, float] | None = None
 
     use_compiled = tcfg.compiled
@@ -332,14 +357,7 @@ def _train_body(
             "host loop (compiled mode stages raw batches)")
         use_compiled = False
 
-    if steps_left > 0 and use_compiled:
-        machine = machine or calibrate(fast=True)
-        params, opt_state, plan_row = _train_compiled(
-            cfg, tcfg, step_fn, stream, params, opt_state, start_step,
-            history, machine, data_cfg, log,
-            host_comm_words=host_comm_words, host_supersteps=host_supersteps)
-        log("[plan] " + " ".join(f"{k}={v:.4g}" for k, v in plan_row.items()))
-    elif steps_left > 0:
+    def _run_host_loop(params, opt_state, start_step, steps_left):
         batches = BatchStream(stream, steps_left, put_fn=batch_putter)
         out_streams: list[Any] = []
         out_every: list[int] = []
@@ -359,13 +377,12 @@ def _train_body(
             host_comm_words_per_hyperstep=host_comm_words,
             host_supersteps_per_hyperstep=host_supersteps,
         )
-        machine = machine or calibrate(fast=True)
 
         def hyperstep(state, tokens):
             params, opt_state = state
             params, opt_state, metrics = step_fn(params, opt_state, tokens[0])
             metrics = jax.tree_util.tree_map(float, jax.device_get(metrics))
-            step_idx = start_step + len(history)
+            step_idx = initial_start + len(history)
             history.append(metrics)
             if step_idx % tcfg.log_every == 0:
                 log(f"[train] step {step_idx} loss {metrics['loss']:.4f} "
@@ -380,7 +397,10 @@ def _train_body(
             state = (params, opt_state)
             return (state, [tok]) if out_streams else state
 
+        fetch_dominant = 0
+
         def on_end(h: int, _streams) -> None:
+            nonlocal fetch_dominant
             if not runner.records:  # the h=0 call precedes the first hyperstep
                 return
             rec = runner.records[-1]
@@ -389,19 +409,81 @@ def _train_body(
             if monitor.observe(step_idx, rec.step_seconds):
                 log(f"[straggler] step {step_idx}: {rec.step_seconds:.3f}s "
                     f"(mean {monitor.mean:.3f}s)")
+            # fetch-wait response (DESIGN.md §10): when the bulk sync keeps
+            # blocking on the down-lane, deepen the stream's prefetch so the
+            # producer runs further ahead of the consumer
+            if rec.fetch_wait_seconds > rec.compute_seconds:
+                fetch_dominant += 1
+                if fetch_dominant >= 3:
+                    depth = max(4, 2 * stream.prefetch_depth)
+                    stream.start_prefetch(depth)
+                    log(f"[health] fetch-wait dominant {fetch_dominant} steps "
+                        f"running; prefetch depth -> {depth}")
+                    fetch_dominant = 0
+            else:
+                fetch_dominant = 0
 
         runner = HyperstepRunner(
             hyperstep, [batches], out_streams=out_streams,
             on_hyperstep_end=on_end, plan=plan, machine=machine,
+            faults=faults, health=health,
         )
         params, opt_state = runner.run((params, opt_state))
         if runner.records:  # on_end never fires after the terminal hyperstep
             rec = runner.records[-1]
             history[-1]["step_seconds"] = rec.step_seconds
             monitor.observe(start_step + rec.index, rec.step_seconds)
-        plan_row = runner.predicted_vs_measured()
-        log("[plan] " + " ".join(f"{k}={v:.4g}" for k, v in plan_row.items()))
+        return params, opt_state, runner.predicted_vs_measured()
 
+    initial_start = start_step
+    resumes = 0
+    while True:
+        steps_left = tcfg.steps - start_step
+        try:
+            if steps_left > 0 and use_compiled:
+                machine = machine or calibrate(fast=True)
+                params, opt_state, plan_row = _train_compiled(
+                    cfg, tcfg, step_fn, stream, params, opt_state, start_step,
+                    history, machine, data_cfg, log,
+                    host_comm_words=host_comm_words,
+                    host_supersteps=host_supersteps,
+                    faults=faults, health=health)
+            elif steps_left > 0:
+                machine = machine or calibrate(fast=True)
+                params, opt_state, plan_row = _run_host_loop(
+                    params, opt_state, start_step, steps_left)
+            break
+        except Exception as e:  # noqa: BLE001 — crash → checkpoint resume
+            if resumes >= tcfg.max_restarts or not tcfg.ckpt_dir:
+                raise
+            resumes += 1
+            log(f"[resume] crash at attempt {resumes}: {e!r}")
+            restored = ckpt.restore_latest(
+                tcfg.ckpt_dir, {"params": params, "opt_state": opt_state},
+                on_corrupt=on_corrupt)
+            if restored is None:
+                # nothing valid on disk: replay from scratch
+                params = M.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+                opt_state = opt.init(params)
+                start_step = initial_start = 0
+                stream.load_state_dict(stream.state_at(0))
+                del history[:]
+            else:
+                start_step, state, data_state = restored
+                params, opt_state = state["params"], state["opt_state"]
+                stream.load_state_dict(data_state)    # seek — the BSPS restart
+                # drop replayed-step entries so the final history is
+                # token-for-token what an uncrashed run produces
+                del history[start_step - initial_start:]
+            health.emit("BSPS212", f"resumed from step {start_step} "
+                        f"(attempt {resumes}/{tcfg.max_restarts})",
+                        source=f"train_{cfg.name}", index=start_step)
+            log(f"[resume] restored step {start_step}, stream cursor "
+                f"{stream.cursor}")
+
+    stream.stop_prefetch()
+    if plan_row is not None:
+        log("[plan] " + " ".join(f"{k}={v:.4g}" for k, v in plan_row.items()))
     if tcfg.ckpt_dir:
         ckpt.save(tcfg.ckpt_dir, tcfg.steps,
                   {"params": params, "opt_state": opt_state},
@@ -409,5 +491,6 @@ def _train_body(
     return {
         "params": params, "opt_state": opt_state,
         "history": history, "stragglers": monitor.events,
-        "plan_row": plan_row,
+        "plan_row": plan_row, "resumes": resumes,
+        "health": health.rollup(),
     }

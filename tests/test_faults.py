@@ -1,0 +1,484 @@
+"""Chaos suite (DESIGN.md §10): every injected fault class paired with the
+specific recovery it exercises, plus determinism — the same FaultPlan seed
+must produce the same fault trace and the same outputs on replay.
+
+Fault → recovery pairs covered here:
+
+* dma_stall     → fetch-wait shows in records/BSPS202; train host loop deepens
+                  the stream's prefetch
+* straggler     → SLO violations (BSPS201) drive the engine's degradation
+                  state machine: shed admissions (BSPS208), recover (BSPS209)
+* corrupt       → NaN/out-of-vocab flagged (BSPS203) in host-loop AND compiled
+                  modes, identical hyperstep-indexed traces
+* dispatch_fail → bounded retry-with-backoff recovers (BSPS204) or exhausts
+                  (BSPS211); train auto-resumes from the last checkpoint
+                  token-for-token (BSPS212)
+* page_exhaust  → admission defers (BSPS207) and retries next boundary
+* data_error    → bounded source retry recovers (BSPS210) or surfaces
+                  DataSourceError with the failing batch index (no hang)
+"""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bsp import BSPAccelerator
+from repro.core.faults import (
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    fault_signature,
+)
+from repro.core.health import HealthMonitor
+from repro.core.hyperstep import HyperstepRunner
+from repro.core.stream import StreamSet
+
+ACC = BSPAccelerator(p=1, g=0.0, l=1e5, r=1e9, e=0.25,
+                     L=(1 << 25) // 4, E=(1 << 34) // 4,
+                     word_bytes=4, name="test-host")
+
+
+def _tiny_cfg():
+    from repro.configs import get_config
+    return dataclasses.replace(get_config("minicpm-2b", smoke=True),
+                               num_layers=2, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    from repro.models import model as M
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _streams(n=8):
+    ss = StreamSet()
+    down = ss.create(np.arange(n * 4, dtype=np.float32).reshape(n, 4), 1,
+                     name="x")
+    up = ss.create(np.zeros((n, 4), np.float32), 1, name="y")
+    return down, up
+
+
+def _double(state, toks):
+    return state + 1, [toks[0] * 2.0]
+
+
+# ---------------------------------------------------------------- the plan ----
+
+
+def test_fault_plan_same_seed_same_triggers():
+    specs = [FaultSpec("dma_stall", rate=0.2, delay_s=0.001),
+             FaultSpec("corrupt", rate=0.1, at=(3,))]
+    a = FaultPlan(specs, seed=7, horizon=256)
+    b = FaultPlan(specs, seed=7, horizon=256)
+    assert a.triggers("dma_stall") == b.triggers("dma_stall")
+    assert a.triggers("corrupt") == b.triggers("corrupt")
+    c = FaultPlan(specs, seed=8, horizon=256)
+    assert a.triggers("dma_stall") != c.triggers("dma_stall")
+    # explicit indices always survive the expansion
+    assert 3 in next(iter(c.triggers("corrupt").values()))
+
+
+def test_fault_plan_count_expands_consecutive():
+    plan = FaultPlan([FaultSpec("dispatch_fail", at=(4,), count=3)])
+    assert next(iter(plan.triggers("dispatch_fail").values())) == \
+        frozenset({4, 5, 6})
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor_strike")
+    with pytest.raises(ValueError):
+        FaultSpec("dma_stall", rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec("dispatch_fail", count=0)
+    with pytest.raises(ValueError):
+        FaultSpec("corrupt", mode="gamma_ray")
+
+
+# ------------------------------------------------- runner hooks, both modes ----
+
+
+def test_dma_stall_and_straggler_host_loop():
+    plan = FaultPlan([FaultSpec("dma_stall", at=(2,), delay_s=0.02),
+                      FaultSpec("straggler", at=(3,), delay_s=0.02)])
+    inj = plan.replay()
+    mon = HealthMonitor(warmup=2)
+    d, u = _streams()
+    runner = HyperstepRunner(_double, [d], out_streams=[u],
+                             faults=inj, health=mon)
+    runner.run(0)
+    kinds = {(r.kind, r.index) for r in inj.trace}
+    assert ("dma_stall", 2) in kinds and ("straggler", 3) in kinds
+    # the stall gated the bulk sync: fetch wait dominated at least one step
+    assert mon.counts_by_code().get("BSPS202", 0) >= 1
+    # the straggler stretched step 3's wall time past its neighbours
+    assert runner.records[3].step_seconds >= 0.02
+
+
+def test_corrupt_trace_identical_host_vs_compiled():
+    plan = FaultPlan([FaultSpec("corrupt", at=(5,), slot=0, mode="nan")])
+
+    inj_h, mon_h = plan.replay(), HealthMonitor(warmup=2)
+    d, u = _streams()
+    HyperstepRunner(_double, [d], out_streams=[u],
+                    faults=inj_h, health=mon_h).run(0)
+
+    inj_c, mon_c = plan.replay(), HealthMonitor(warmup=2)
+    d2, u2 = _streams()
+    HyperstepRunner(_double, [d2], out_streams=[u2],
+                    faults=inj_c, health=mon_c).run(jnp.asarray(0),
+                                                    compiled=True)
+
+    assert fault_signature(inj_h.trace) == fault_signature(inj_c.trace)
+    for up, mon in ((u, mon_h), (u2, mon_c)):
+        assert bool(np.isnan(np.asarray(up.data)).any())
+        assert np.isnan(np.asarray(up.data)[5]).any()   # the declared step
+        assert mon.counts_by_code().get("BSPS203", 0) >= 1
+
+
+def test_dispatch_fail_raises_before_state_moves_then_retry_succeeds():
+    plan = FaultPlan([FaultSpec("dispatch_fail", at=(0,))])
+    inj = plan.replay()
+    d, u = _streams()
+    runner = HyperstepRunner(_double, [d], out_streams=[u], faults=inj)
+    with pytest.raises(FaultInjected) as ei:
+        runner.run(0)
+    assert ei.value.record.kind == "dispatch_fail"
+    assert runner.hypersteps_run == 0          # nothing moved
+    runner.run(0)                              # the retry consults index 1
+    assert runner.hypersteps_run == 8
+    np.testing.assert_array_equal(np.asarray(u.data),
+                                  np.arange(32, dtype=np.float32)
+                                  .reshape(8, 4) * 2.0)
+
+
+# ------------------------------------------------------------------ engine ----
+
+
+def test_engine_dispatch_retry_recovers_and_matches_clean_run(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+
+    clean = ServeEngine(cfg, params, max_lanes=2, pool_seq=48, segment_len=4,
+                        machine=ACC)
+    rid = clean.submit(prompt, 8)
+    want = clean.run_until_drained()[rid]
+
+    inj = FaultPlan([FaultSpec("dispatch_fail", at=(0,))]).replay()
+    eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=48, segment_len=4,
+                      machine=ACC, faults=inj, retry_backoff_s=0.0)
+    rid = eng.submit(prompt, 8)
+    got = eng.run_until_drained()[rid]
+
+    np.testing.assert_array_equal(got, want)   # retry replays identically
+    codes = eng.health.counts_by_code()
+    assert codes.get("BSPS204", 0) == 1 and "BSPS211" not in codes
+    assert [r.kind for r in inj.trace] == ["dispatch_fail"]
+
+
+def test_engine_dispatch_retries_exhausted_raises(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    inj = FaultPlan([FaultSpec("dispatch_fail", at=(0,), count=10)]).replay()
+    eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=48, segment_len=4,
+                      machine=ACC, faults=inj, dispatch_retries=1,
+                      retry_backoff_s=0.0)
+    eng.submit(np.arange(1, 5, dtype=np.int32), 4)
+    with pytest.raises(FaultInjected):
+        eng.step_segment()
+    codes = eng.health.counts_by_code()
+    assert codes.get("BSPS204", 0) == 2        # first attempt + one retry
+    assert codes.get("BSPS211", 0) == 1
+
+
+def test_engine_page_exhaustion_defers_then_recovers(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    inj = FaultPlan([FaultSpec("page_exhaust", at=(0,), count=2)]).replay()
+    eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=48, segment_len=4,
+                      machine=ACC, faults=inj)
+    rid = eng.submit(np.arange(1, 7, dtype=np.int32), 4)
+    out = eng.run_until_drained()
+    assert len(out[rid]) == 6 + 4
+    codes = eng.health.counts_by_code()
+    assert codes.get("BSPS207", 0) == 2        # deferred twice, then admitted
+    assert sorted(r.index for r in inj.trace) == [0, 1]
+
+
+def test_engine_deadline_expires_queued_and_running(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=48, segment_len=4,
+                      machine=ACC)
+    # queued expiry: dead on arrival, retired with zero tokens
+    r_dead = eng.submit(np.arange(1, 5, dtype=np.int32), 4, deadline_s=1e-9)
+    # running expiry: joins, decodes one segment, then the budget runs out
+    r_slow = eng.submit(np.arange(1, 7, dtype=np.int32), 12)
+    eng.step_segment()
+    assert eng.finished[r_dead].timed_out
+    assert len(eng.finished[r_dead].generated) == 0
+    eng.running[r_slow].deadline_s = 1e-9
+    eng.step_segment()
+    assert eng.finished[r_slow].timed_out
+    assert 0 < len(eng.finished[r_slow].generated) < 12
+    assert eng.pool.free_lanes == eng.max_lanes   # lane + pages reclaimed
+    assert eng.health.counts_by_code().get("BSPS205", 0) == 2
+
+
+def test_engine_cancel_reclaims_lane_and_pages_immediately(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    eng = ServeEngine(cfg, params, max_lanes=1, pool_seq=48, segment_len=4,
+                      machine=ACC)
+    ra = eng.submit(np.arange(1, 7, dtype=np.int32), 8)
+    rb = eng.submit(np.arange(1, 5, dtype=np.int32), 4)
+    eng.step_segment()                      # A holds the only lane, B queued
+    assert ra in eng.running and rb not in eng.running
+    assert eng.cancel(ra)
+    assert eng.finished[ra].cancelled
+    assert eng.pool.free_lanes == 1         # reclaimed before any boundary
+    assert eng.pool.table.free_pages == eng.pool.table.num_pages
+    assert not eng.cancel(99)               # unknown rid
+    out = eng.run_until_drained()           # B takes the freed lane
+    assert len(out[rb]) == 4 + 4
+    assert eng.health.counts_by_code().get("BSPS206", 0) == 1
+
+
+def test_engine_straggler_degrades_sheds_then_recovers(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    # segments 3 and 4 (hypersteps 12..19) each eat 4 x 50ms of injected
+    # straggle — orders of magnitude past the SLO band relative to the
+    # warmup baseline, so the state machine must trip after two of them
+    inj = FaultPlan([FaultSpec("straggler", at=tuple(range(12, 20)),
+                               delay_s=0.05)]).replay()
+    eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=64, segment_len=4,
+                      machine=ACC, faults=inj, slo_band=(1e-3, 10.0),
+                      slo_warmup=2, degrade_after=2, recover_after=2)
+    ra = eng.submit(np.arange(1, 7, dtype=np.int32), 36)   # 9 segments
+    for _ in range(20):
+        eng.step_segment()
+        if eng.degraded:
+            break
+    assert eng.degraded, eng.health.format_events()
+    assert eng.health.counts_by_code().get("BSPS208", 0) == 1
+
+    rb = eng.submit(np.arange(1, 5, dtype=np.int32), 4)
+    eng.step_segment()
+    assert eng.running and rb not in eng.running   # shed while degraded
+    assert any(q.rid == rb for q in eng.queue)
+
+    out = eng.run_until_drained()                  # healthy again: recovers
+    assert not eng.degraded
+    codes = eng.health.counts_by_code()
+    assert codes.get("BSPS201", 0) >= 2
+    assert codes.get("BSPS209", 0) == 1
+    assert len(out[ra]) == 6 + 36 and len(out[rb]) == 4 + 4
+
+
+def test_engine_corruption_flagged_out_of_vocab(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    inj = FaultPlan([FaultSpec("corrupt", at=(1,), slot=0,
+                               mode="bitflip")]).replay()
+    eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=48, segment_len=4,
+                      machine=ACC, faults=inj)
+    rid = eng.submit(np.arange(1, 7, dtype=np.int32), 4)
+    out = eng.run_until_drained()
+    assert eng.health.counts_by_code().get("BSPS203", 0) >= 1
+    assert any(t >= cfg.vocab_size for t in out[rid])   # the flipped id
+    assert [(r.kind, r.index) for r in inj.trace] == [("corrupt", 1)]
+
+
+def test_engine_fault_trace_and_outputs_deterministic(tiny):
+    from repro.launch.engine import ServeEngine
+
+    cfg, params = tiny
+    plan = FaultPlan([FaultSpec("dma_stall", rate=0.2, delay_s=0.001),
+                      FaultSpec("straggler", rate=0.2, delay_s=0.001),
+                      FaultSpec("corrupt", rate=0.1, mode="bitflip")],
+                     seed=11, horizon=64)
+    runs = []
+    for _ in range(2):
+        inj = plan.replay()
+        eng = ServeEngine(cfg, params, max_lanes=2, pool_seq=48,
+                          segment_len=4, machine=ACC, faults=inj)
+        rids = [eng.submit(np.arange(1, 7, dtype=np.int32), 8),
+                eng.submit(np.arange(1, 5, dtype=np.int32), 8)]
+        out = eng.run_until_drained()
+        runs.append((fault_signature(inj.trace),
+                     [out[r].tolist() for r in rids]))
+    assert runs[0] == runs[1]
+
+
+# ----------------------------------------------------------------- the data ----
+
+
+def test_data_retry_recovers_and_matches_clean_stream():
+    from repro.data.pipeline import DataConfig, TokenStream
+
+    dcfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=3,
+                      read_retries=2, retry_backoff_s=0.0)
+    clean = TokenStream(dcfg)
+    want = [clean.next_batch() for _ in range(4)]
+
+    inj = FaultPlan([FaultSpec("data_error", at=(1,), count=1)]).replay()
+    mon = HealthMonitor()
+    ds = TokenStream(dcfg, faults=inj, health=mon)
+    got = [ds.next_batch() for _ in range(4)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w["tokens"], g["tokens"])
+    assert mon.counts_by_code().get("BSPS210", 0) == 1
+    assert [(r.kind, r.index) for r in inj.trace] == [("data_error", 1)]
+    assert len(ds.retry_log) == 1
+
+
+def test_data_retries_exhausted_surface_batch_index():
+    from repro.data.pipeline import DataConfig, DataSourceError, TokenStream
+
+    dcfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=3,
+                      read_retries=1, retry_backoff_s=0.0)
+    inj = FaultPlan([FaultSpec("data_error", at=(2,), count=5)]).replay()
+    mon = HealthMonitor()
+    ds = TokenStream(dcfg, faults=inj, health=mon)
+    with pytest.raises(DataSourceError) as ei:
+        for _ in range(4):
+            ds.next_batch()
+    assert ei.value.batch_index == 2
+    assert mon.counts_by_code().get("BSPS211", 0) == 1
+
+
+def test_prefetch_thread_surfaces_error_instead_of_hanging():
+    from repro.data.pipeline import DataConfig, DataSourceError, TokenStream
+
+    dcfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=3,
+                      read_retries=0, retry_backoff_s=0.0)
+    inj = FaultPlan([FaultSpec("data_error", at=(3,), count=5)]).replay()
+    ds = TokenStream(dcfg, faults=inj)
+    ds.start_prefetch(2)
+    got = [ds.next_batch() for _ in range(3)]          # 0, 1, 2 arrive clean
+    assert len(got) == 3
+    with pytest.raises(DataSourceError) as ei:
+        ds.next_batch()                                # 3 is the poisoned one
+    assert ei.value.batch_index == 3
+    ds.stop_prefetch()                                 # joins; must not hang
+
+
+# ------------------------------------------------------------- checkpoints ----
+
+
+def _tree():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.ones((3,), np.float32)}
+
+
+def test_restore_latest_falls_back_past_corrupted_checkpoint(tmp_path):
+    from repro.train import checkpoint as ckpt
+
+    d = str(tmp_path)
+    state = {"params": _tree()}
+    ckpt.save(d, 2, state, data_state={"cursor": 2}, blocking=True)
+    ckpt.save(d, 4, state, data_state={"cursor": 4}, blocking=True)
+    # corrupt the newest: flip bytes inside the committed npz
+    with open(os.path.join(d, "step_00000004", "params.npz"), "r+b") as f:
+        f.seek(40)
+        f.write(b"\xff" * 64)
+    seen = []
+    out = ckpt.restore_latest(d, {"params": _tree()},
+                              on_corrupt=lambda s, e: seen.append(s))
+    assert out is not None
+    step, st, data_state = out
+    assert step == 2 and data_state["cursor"] == 2
+    np.testing.assert_array_equal(st["params"]["w"], _tree()["w"])
+    assert seen == [4]
+
+
+def test_torn_tmp_and_manifestless_dirs_are_not_committed(tmp_path):
+    from repro.train import checkpoint as ckpt
+
+    d = str(tmp_path)
+    ckpt.save(d, 3, {"params": _tree()}, blocking=True)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))   # crash mid-write
+    os.makedirs(os.path.join(d, "step_00000007"))       # renamed, no manifest
+    assert ckpt.committed_steps(d) == [3]
+    assert ckpt.latest_step(d) == 3
+
+
+# ------------------------------------------------------------ train resume ----
+
+
+def _train_once(tmp_path, name, *, compiled, faults, max_restarts):
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import AdamW
+    from repro.optim.schedule import constant
+    from repro.train.loop import TrainConfig, train
+
+    cfg = _tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2,
+                      seed=0)
+    tcfg = TrainConfig(steps=8, ckpt_dir=str(tmp_path / name), ckpt_every=4,
+                       log_every=100, compiled=compiled,
+                       max_restarts=max_restarts)
+    return train(cfg, tcfg, AdamW(schedule=constant(1e-3)), data_cfg=dcfg,
+                 log=lambda s: None, faults=faults)
+
+
+@pytest.mark.parametrize("compiled", [True, False])
+def test_train_crash_mid_interval_resumes_token_for_token(tmp_path, compiled):
+    base = _train_once(tmp_path, f"base{compiled}", compiled=compiled,
+                       faults=None, max_restarts=0)
+    # compiled: the 2nd dispatch (segment of steps 4..8); host loop: the
+    # consult before hyperstep 5 — either way the crash lands mid-interval,
+    # after the step-4 checkpoint exists
+    at = 1 if compiled else 5
+    inj = FaultPlan([FaultSpec("dispatch_fail", at=(at,))]).replay()
+    res = _train_once(tmp_path, f"crash{compiled}", compiled=compiled,
+                      faults=inj, max_restarts=2)
+    assert res["resumes"] == 1
+    assert res["health"]["count_by_code"].get("BSPS212", 0) == 1
+    want = [h["loss"] for h in base["history"]]
+    got = [h["loss"] for h in res["history"]]
+    assert len(got) == 8
+    assert want == got                     # token-for-token identical
+
+
+def test_train_crash_without_restart_budget_propagates(tmp_path):
+    inj = FaultPlan([FaultSpec("dispatch_fail", at=(1,))]).replay()
+    with pytest.raises(FaultInjected):
+        _train_once(tmp_path, "nobudget", compiled=True, faults=inj,
+                    max_restarts=0)
+
+
+def test_train_host_loop_fetch_wait_deepens_prefetch(tmp_path):
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import AdamW
+    from repro.optim.schedule import constant
+    from repro.train.loop import TrainConfig, train
+
+    cfg = _tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2,
+                      seed=0)
+    # stall every fetch hard enough that the bulk sync blocks on the lane
+    inj = FaultPlan([FaultSpec("dma_stall", at=tuple(range(12)),
+                               delay_s=0.05)]).replay()
+    logs = []
+    res = train(cfg, TrainConfig(steps=10, log_every=100, compiled=False),
+                AdamW(schedule=constant(1e-3)), data_cfg=dcfg,
+                log=logs.append, faults=inj)
+    assert res["health"]["count_by_code"].get("BSPS202", 0) >= 3
+    assert any("prefetch depth ->" in line for line in logs)
