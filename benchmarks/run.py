@@ -12,6 +12,9 @@ Prints ``name,value,derived`` CSV per the repo convention. Modules:
   chaos_serve      — fault-injected serve + crash-resume train (writes BENCH_chaos.json)
   multihost        — third pricing level: per-level rows + scalability curves
                      (writes BENCH_multihost.json; needs >= 8 forced devices)
+  scaling          — BSF scalability boundaries per flagship, priced on the
+                     calibration store, plus the drift-refit-reprice drill
+                     (writes BENCH_scaling.json)
 
 Select a subset: ``python -m benchmarks.run cannon_crossover``.
 """
@@ -30,6 +33,7 @@ from benchmarks import (
     multihost,
     plan_table,
     roofline_table,
+    scaling,
     serve_batch,
     transfer_curve,
 )
@@ -45,6 +49,7 @@ MODULES = {
     "serve_batch": serve_batch,
     "chaos_serve": chaos_serve,
     "multihost": multihost,
+    "scaling": scaling,
 }
 
 

@@ -14,14 +14,13 @@ is a ~100 ms variant with smaller probes, cheap enough to run at job start.
 
 from __future__ import annotations
 
-import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bsp import BSPAccelerator
-from repro.core.plan import median_seconds
 
 __all__ = [
     "calibrate",
@@ -35,8 +34,29 @@ __all__ = [
 ]
 
 
-def _time(fn, repeats: int = 5) -> float:
-    return median_seconds(fn, repeats)
+def _time(fn, repeats: int = 5, *, max_repeats: int = 17) -> float:
+    """Probe timer: discard the first (jit-compiling) call, then median.
+
+    Same protocol as :func:`repro.core.plan.median_seconds` plus two probe
+    hardenings (DESIGN.md §11): the warmup call is discarded *explicitly*
+    (the first dispatch pays compilation + first allocation and would poison
+    a fast pack), and under high variance — interquartile range above 25% of
+    the median, a contended CI host's signature — the repeat count escalates
+    until the spread settles or ``max_repeats`` is hit.
+    """
+    fn()  # the discarded first repeat: compile + first-touch allocation
+    repeats = max(int(repeats), 3)
+    while True:
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        med = float(np.median(ts))
+        q1, q3 = np.percentile(ts, (25, 75))
+        if (q3 - q1) <= 0.25 * med or repeats >= max_repeats:
+            return med
+        repeats = min(2 * repeats + 1, max_repeats)
 
 
 def measure_flops_rate(n: int = 768) -> float:
@@ -91,7 +111,10 @@ def measure_hyperstep_latency() -> float:
     runner = HyperstepRunner(lambda acc, t: tiny(acc, t[0]), [s1],
                              prefetch=False, device=jax.devices()[0])
     runner.run(jnp.float32(0.0))
-    return float(np.median([r.step_seconds for r in runner.records]))
+    # record 0 pays jit compilation — the canonical probe outlier; a 16-step
+    # run medianed *with* it could double the measured l on a cold backend
+    recs = runner.records[1:] or runner.records
+    return float(np.median([r.step_seconds for r in recs]))
 
 
 def calibrate(p: int = 1, *, fast: bool = False) -> BSPAccelerator:
@@ -171,13 +194,33 @@ def calibrate_host_level(acc: BSPAccelerator, mesh, axis: str = "host") -> BSPAc
     )
 
 
-@functools.lru_cache(maxsize=None)
+_MACHINE_CACHE: dict[tuple, BSPAccelerator] = {}
+
+
+def _machine_cache_key(p: int) -> tuple:
+    return (int(p), jax.default_backend(),
+            tuple((d.platform, str(getattr(d, "device_kind", "")), d.id)
+                  for d in jax.devices()))
+
+
 def default_machine(p: int = 1) -> BSPAccelerator:
-    """The process-wide calibrated machine pack, measured exactly once.
+    """The process-wide calibrated machine pack, measured once per device set.
 
     Hot paths that need a machine but were given none (``generate()``, the
     serve engine) must use this instead of calling :func:`calibrate` inline —
     even the ``fast=True`` probe costs ~100 ms of matmul + memcpy timing,
     which would otherwise be paid per request.
+
+    The memo is keyed on ``(p, backend, device set)``, not just ``p``: a
+    backend or device-count change mid-process (an ``XLA_FLAGS`` forced mesh
+    in tests/CI, a fallback from an accelerator to CPU) re-measures instead
+    of serving the stale pack the old device set produced.
     """
-    return calibrate(p, fast=True)
+    key = _machine_cache_key(p)
+    pack = _MACHINE_CACHE.get(key)
+    if pack is None:
+        pack = _MACHINE_CACHE[key] = calibrate(p, fast=True)
+    return pack
+
+
+default_machine.cache_clear = _MACHINE_CACHE.clear  # lru_cache-compatible hook

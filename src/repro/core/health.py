@@ -35,16 +35,30 @@ BSPS209    info   SLO recovered: degraded mode exited
 BSPS210    warn   data-source read failed (will retry)
 BSPS211    error  bounded retry exhausted; error surfaced to caller
 BSPS212    warn   crash mid-interval; auto-resumed from checkpoint
+BSPS220    warn   sustained predicted/measured drift; recalibration requested
+BSPS221    info   machine pack refit from the calibration store and adopted
+BSPS222    warn   recalibration requested but no confident refit available
 =========  =====  =====================================================
+
+The BSPS22x codes are the drift layer (DESIGN.md §11): BSPS201 flags a
+*single* record leaving the SLO band, BSPS220 flags a *sustained* shift —
+the windowed median of post-warmup ratios leaving ``drift_band`` — and
+carries a :class:`RecalibrationEvent` consumers poll with
+:meth:`HealthMonitor.pop_recalibration` to trigger a calibration-store refit
+(``repro.core.calibstore``). A consumer that adopts a refit pack should call
+:meth:`HealthMonitor.rebaseline` so the baseline re-learns against the new
+predictions instead of alarming on the change it itself just made.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Any, Iterable, Sequence
 
-__all__ = ["HEALTH_CODES", "HEALTH_SEVERITY", "HealthEvent", "HealthMonitor"]
+__all__ = ["HEALTH_CODES", "HEALTH_SEVERITY", "HealthEvent", "HealthMonitor",
+           "RecalibrationEvent"]
 
 HEALTH_CODES = {
     "BSPS201": "slo-violation",
@@ -59,6 +73,9 @@ HEALTH_CODES = {
     "BSPS210": "data-source-retry",
     "BSPS211": "retry-exhausted",
     "BSPS212": "resumed-from-checkpoint",
+    "BSPS220": "calibration-drift",
+    "BSPS221": "recalibrated",
+    "BSPS222": "recalibration-unavailable",
 }
 
 HEALTH_SEVERITY = {
@@ -74,7 +91,28 @@ HEALTH_SEVERITY = {
     "BSPS210": "warn",
     "BSPS211": "error",
     "BSPS212": "warn",
+    "BSPS220": "warn",
+    "BSPS221": "info",
+    "BSPS222": "warn",
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class RecalibrationEvent:
+    """A BSPS220 drift finding, queued for a consumer to act on.
+
+    ``ratio`` is the windowed median of measured/predicted ratios *relative
+    to the learned baseline* — the sustained shift factor, not one noisy
+    observation. Consumers (serve engine, train loop) pop the event, ask the
+    calibration store for a refit pack over roughly the same window, and
+    re-price online (DESIGN.md §11 drift→refit→re-price flow).
+    """
+
+    source: str
+    index: int | None
+    ratio: float           # windowed median rel ratio that left the band
+    baseline_ratio: float  # the baseline it is relative to
+    window: int            # observations the median was taken over
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,19 +141,34 @@ class HealthMonitor:
     median measured/predicted ratio) and never alarm. ``consecutive_violations``
     / ``consecutive_healthy`` feed the serve engine's degradation state
     machine.
+
+    ``drift_band``/``drift_window`` are the BSPS220 layer on top: when the
+    median of the last ``drift_window`` post-warmup ratios leaves
+    ``drift_band`` × baseline, one :class:`RecalibrationEvent` is queued (per
+    excursion — the detector re-arms when the median returns inside) for
+    :meth:`pop_recalibration`. The drift band matches the acceptance window a
+    refit pack must restore predictions into.
     """
 
     def __init__(self, *, band: tuple[float, float] = (0.25, 4.0),
-                 warmup: int = 3, name: str = "") -> None:
+                 warmup: int = 3, name: str = "",
+                 drift_band: tuple[float, float] = (0.5, 2.0),
+                 drift_window: int = 4) -> None:
         self.band = (float(band[0]), float(band[1]))
         self.warmup = int(warmup)
         self.name = name
+        self.drift_band = (float(drift_band[0]), float(drift_band[1]))
+        self.drift_window = max(int(drift_window), 1)
         self.events: list[HealthEvent] = []
         self.observed = 0
         self.consecutive_violations = 0
         self.consecutive_healthy = 0
         self.last_ratio = 0.0
         self._ratios: list[float] = []
+        self._drift_ratios: deque[float] = deque(maxlen=self.drift_window)
+        self._drift_active = False
+        self.recalibrations: list[RecalibrationEvent] = []
+        self._pending_recalibration: RecalibrationEvent | None = None
 
     # -- event plumbing ------------------------------------------------------
 
@@ -151,7 +204,8 @@ class HealthMonitor:
         return srt[(len(srt) - 1) // 2]
 
     def observe_record(self, record: Any, predicted_seconds: float, *,
-                       source: str = "", index: int | None = None
+                       source: str = "", index: int | None = None,
+                       measured_seconds: float | None = None
                        ) -> HealthEvent | None:
         """Score one HyperstepRecord against its Eq. 1 prediction.
 
@@ -159,9 +213,15 @@ class HealthMonitor:
         None. Also flags fetch-wait-dominated records (BSPS202) — those are
         not SLO violations (the sync still closed) but signal that the block
         size or prefetch depth is mis-tuned for the observed bandwidth.
+
+        ``measured_seconds`` overrides the scored wall time — the compiled
+        dispatch passes its full staging+compute+drain wall, since its
+        record's ``step_seconds`` holds the compute window alone and Eq. 1
+        prices the link crossings too (a stalled DMA must move the ratio).
         """
         self.observed += 1
-        measured = float(getattr(record, "step_seconds", 0.0))
+        measured = (float(measured_seconds) if measured_seconds is not None
+                    else float(getattr(record, "step_seconds", 0.0)))
         ratio = measured / max(float(predicted_seconds), 1e-12)
         self.last_ratio = ratio
 
@@ -178,6 +238,9 @@ class HealthMonitor:
             self.consecutive_healthy += 1
             return None
         rel = ratio / max(self.baseline_ratio, 1e-12)
+        if math.isfinite(rel):
+            self._drift_ratios.append(rel)
+            self._check_drift(source, index)
         if not (self.band[0] <= rel <= self.band[1]) and math.isfinite(rel):
             self.consecutive_violations += 1
             self.consecutive_healthy = 0
@@ -189,6 +252,57 @@ class HealthMonitor:
         self.consecutive_violations = 0
         self.consecutive_healthy += 1
         return None
+
+    # -- drift detection (BSPS22x, DESIGN.md §11) ------------------------------
+
+    def _check_drift(self, source: str, index: int | None) -> None:
+        if len(self._drift_ratios) < self.drift_window:
+            return
+        # A *strict majority* of the window must sit outside the band before
+        # an event fires: both order-statistic medians below (or above) it.
+        # The lower median alone would fire with only half the window
+        # drifted, and the consumer's refit over that mixed window is
+        # statistically ambiguous — the outlier screen can't tell which half
+        # is the new reality.
+        ranked = sorted(self._drift_ratios)
+        n = len(ranked)
+        lo_med, hi_med = ranked[(n - 1) // 2], ranked[n // 2]
+        med = 0.5 * (lo_med + hi_med)
+        lo, hi = self.drift_band
+        if not (hi_med < lo or lo_med > hi):
+            self._drift_active = False    # excursion over: re-arm
+            return
+        if self._drift_active:
+            return                        # one event per sustained excursion
+        self._drift_active = True
+        ev = RecalibrationEvent(source=source or self.name, index=index,
+                                ratio=float(med),
+                                baseline_ratio=self.baseline_ratio,
+                                window=self.drift_window)
+        self.recalibrations.append(ev)
+        self._pending_recalibration = ev
+        self.emit("BSPS220",
+                  f"sustained drift: median of last {self.drift_window} "
+                  f"ratios is {med:.3g}x baseline, outside drift band "
+                  f"{self.drift_band}; recalibration requested",
+                  source=source, index=index, value=float(med))
+
+    def pop_recalibration(self) -> RecalibrationEvent | None:
+        """The unconsumed drift event, if any (consumers poll per segment)."""
+        ev, self._pending_recalibration = self._pending_recalibration, None
+        return ev
+
+    def rebaseline(self) -> None:
+        """Forget the learned baseline (call after adopting a refit pack).
+
+        Predictions just changed under the monitor's feet; the next
+        ``warmup`` observations re-learn the baseline ratio without alarming,
+        exactly like job start.
+        """
+        self._ratios = []
+        self._drift_ratios.clear()
+        self._drift_active = False
+        self.consecutive_violations = 0
 
     # -- output checking -----------------------------------------------------
 
@@ -255,6 +369,7 @@ class HealthMonitor:
             "observed": self.observed,
             "slo_violation_rate": self.slo_violation_rate(),
             "baseline_ratio": self.baseline_ratio,
+            "recalibrations": len(self.recalibrations),
         }
 
     def format_events(self, *, limit: int = 20) -> list[str]:

@@ -440,6 +440,15 @@ class HyperstepRunner:
         per hyperstep, plus the mode's dispatch latency) and flushed
         up-stream tokens are NaN-checked — deviations become BSPS2xx
         :class:`~repro.core.health.HealthEvent`\\ s on the monitor.
+    calibstore:
+        Where each run's measured aggregates land as one
+        :class:`~repro.core.calibstore.MeasurementRecord` (DESIGN.md §11) —
+        the raw material for drift refits. Requires ``plan`` + ``machine``
+        (there is nothing to key or screen on otherwise). ``None`` (default)
+        records into the process default store
+        (:func:`~repro.core.calibstore.get_default_store`); pass a
+        :class:`~repro.core.calibstore.CalibrationStore` to isolate, or
+        ``False`` to disable recording.
     """
 
     def __init__(
@@ -460,6 +469,7 @@ class HyperstepRunner:
         verify: bool = True,
         faults: Any | None = None,
         health: Any | None = None,
+        calibstore: Any | None = None,
     ) -> None:
         self._step = step
         self._multi = cores is not None
@@ -533,6 +543,7 @@ class HyperstepRunner:
         self._verified_keys: set[Any] = set()
         self.faults = faults
         self.health = health
+        self.calibstore = calibstore
 
     # -- schedule helpers ----------------------------------------------------
 
@@ -655,12 +666,45 @@ class HyperstepRunner:
                 self.machine.l * dispatches)
         return 1e-3 * max(total, 1)
 
-    def _observe(self, total: int, dispatches: int, index: int) -> None:
+    def _observe(self, total: int, dispatches: int, index: int,
+                 measured_seconds: float | None = None) -> None:
         if self.health is None or not self.records:
             return
         self.health.observe_record(
             self.records[-1], self._predicted_seconds_for(total, dispatches),
-            source=self._source_name, index=index)
+            source=self._source_name, index=index,
+            measured_seconds=measured_seconds)
+
+    def _record_measurement(self, hypersteps: int, dispatches: int,
+                            rec_start: int, fault_start: int,
+                            measured_seconds: float) -> None:
+        """Fold the run just finished into the calibration store (§11).
+
+        Runs with an active injector are recorded *with* their ``faulty``
+        flag rather than dropped — the robust fitter's outlier screen is what
+        rejects a sporadic stall, and a sustained one is real drift it must
+        see. Store recording must never fail the run that was measured.
+        """
+        if self.plan is None or self.machine is None or self.calibstore is False:
+            return
+        store = self.calibstore
+        if store is None:
+            from repro.core.calibstore import get_default_store
+            store = get_default_store()
+        faulty = (self.faults is not None and
+                  len(getattr(self.faults, "trace", ())) > fault_start)
+        try:
+            store.record_run(
+                plan=self.plan, machine=self.machine,
+                records=self.records[rec_start:],
+                hypersteps=hypersteps, dispatches=dispatches,
+                predicted_seconds=self._predicted_seconds_for(
+                    hypersteps, dispatches),
+                measured_seconds=measured_seconds, faulty=faulty)
+        except (ValueError, OverflowError):
+            # a plan whose flops cannot be aggregated (callable per-step work
+            # on a giant grid with no declared mean) prices nothing — skip
+            return
 
     def _apply_compiled_corruption(self, sched: _RunSchedule, out_bufs: Any,
                                    base: int, total: int) -> Any:
@@ -869,6 +913,8 @@ class HyperstepRunner:
             return state
         self._verify_or_raise(total)
         base = self.lifetime_hypersteps
+        fault_start = (len(getattr(self.faults, "trace", ()))
+                       if self.faults is not None else 0)
         if self.faults is not None:
             # simulated preemption: raises before any stream opens or state
             # moves, so the caller may retry the dispatch verbatim
@@ -979,7 +1025,16 @@ class HyperstepRunner:
         self.dispatches_run += 1
         self.lifetime_hypersteps += total
         self.lifetime_dispatches += 1
-        self._observe(total, 1, self.lifetime_dispatches - 1)
+        # the dispatch's bulk-synchronous wall: staging the pseudo-stream
+        # across the link + the scan + draining the outputs. step_seconds
+        # alone is the compute window — Eq. 1 prices the link crossings too,
+        # so health scoring and the calibration record use the full wall
+        # (a stalled DMA lands in stage_s and must move the ratio)
+        wall = stage_s + run_s + drain_s
+        self._observe(total, 1, self.lifetime_dispatches - 1,
+                      measured_seconds=wall)
+        self._record_measurement(total, 1, len(self.records) - 1,
+                                 fault_start, wall)
         return state
 
     def run(self, state: Any, num_hypersteps: int | None = None, *,
@@ -1035,6 +1090,8 @@ class HyperstepRunner:
             self._verify_or_raise(total)
             inj = self.faults
             base = self.lifetime_hypersteps
+            rec_start = len(self.records)
+            fault_start = len(getattr(inj, "trace", ())) if inj is not None else 0
 
             # Hyperstep 0's tokens are assumed resident at program start
             # (paper §2); rate-0 operands are fetched here, once, and reused.
@@ -1219,6 +1276,11 @@ class HyperstepRunner:
             join_writeback()
             if not measure:
                 state = _block(state)  # final bulk sync before cursors rewind
+            # host-loop wall: step_seconds already spans compute + fetch wait
+            # per hyperstep, so the run's measured side is their sum
+            self._record_measurement(
+                total, total, rec_start, fault_start,
+                sum(r.step_seconds for r in self.records[rec_start:]))
             return state
         finally:
             # join any in-flight DMA work *before* closing: close() rewinds

@@ -911,6 +911,10 @@ class PlanChoice:
     predicted_seconds: float
     measured_seconds: float | None = None
     diagnostics: tuple = ()
+    # which machine pack priced this candidate: "eq1" = the closed-form pack
+    # the caller passed, "measured" = a calibration-store refit for the
+    # candidate's band (DESIGN.md §11)
+    priced_on: str = "eq1"
 
     def row(self) -> dict[str, Any]:
         """Flat record for the predicted-vs-measured tables."""
@@ -920,6 +924,7 @@ class PlanChoice:
             "vmem_bytes": self.plan.vmem_bytes,
             "predicted_flops": self.predicted_flops,
             "predicted_seconds": self.predicted_seconds,
+            "priced_on": self.priced_on,
         }
         if self.measured_seconds is not None:
             out["measured_seconds"] = self.measured_seconds
@@ -936,12 +941,20 @@ def enumerate_plans(
     acc: BSPAccelerator,
     *,
     exact: bool | None = None,
+    store: Any | None = None,
 ) -> list[PlanChoice]:
     """Score every candidate parameter set; feasible ones first, cheapest first.
 
     ``exact`` is forwarded to :meth:`StreamPlan.cost` — pass False to score
     with the O(1) closed form regardless of grid size (e.g. sweeps over many
     production-shaped cells).
+
+    ``store`` (a :class:`~repro.core.calibstore.CalibrationStore`) prices a
+    candidate on the *measured* refit pack for its block-shape band when a
+    confident one exists, falling back to closed-form Eq. 1 on ``acc``
+    otherwise — :attr:`PlanChoice.priced_on` records which. Feasibility
+    (local-memory fit, static verification) always uses ``acc``: the refit
+    changes the clock, not the budget.
 
     Every candidate is statically verified
     (:func:`repro.core.verify.verify_plan`, same ``exact`` economy): a
@@ -950,10 +963,24 @@ def enumerate_plans(
     """
     from repro.core.verify import verify_plan
 
+    fitted_packs: dict[int, Any] = {}
+
+    def pricing_pack(plan: StreamPlan) -> tuple[BSPAccelerator, str]:
+        if store is None:
+            return acc, "eq1"
+        from repro.core.calibstore import plan_band
+
+        band = plan_band(plan)
+        if band not in fitted_packs:
+            fitted_packs[band] = store.refit_machine(acc, band=band)
+        fitted = fitted_packs[band]
+        return (fitted, "measured") if fitted is not None else (acc, "eq1")
+
     choices = []
     for params in candidates:
         plan = build(**params)
-        flops = plan.cost(acc, exact=exact)
+        pack, priced_on = pricing_pack(plan)
+        flops = plan.cost(pack, exact=exact)
         diags = tuple(verify_plan(plan, acc, exact=exact))
         choices.append(
             PlanChoice(
@@ -962,8 +989,9 @@ def enumerate_plans(
                 feasible=plan.fits(acc)
                 and not any(d.severity == "error" for d in diags),
                 predicted_flops=flops,
-                predicted_seconds=acc.flops_to_seconds(flops),
+                predicted_seconds=pack.flops_to_seconds(flops),
                 diagnostics=diags,
+                priced_on=priced_on,
             )
         )
     # ties (common on the degenerate closed-form path) break toward fewer
@@ -978,9 +1006,9 @@ def enumerate_plans(
 def median_seconds(fn: Callable[[], Any], repeats: int = 3) -> float:
     """Warmup once (compile/trace), then median wall time of ``repeats`` runs.
 
-    The shared timing protocol: autotune's measurement pass and the host
-    calibration in ``benchmarks/calibrate.py`` both use it, so measured
-    numbers stay comparable.
+    The shared timing protocol for autotune's measurement pass and the
+    benchmarks. The calibration probes (``repro.core.calibrate._time``) use
+    the same discard-first-then-median shape plus variance-escalated repeats.
     """
     fn()
     ts = []
@@ -1000,8 +1028,13 @@ def autotune(
     measure_top: int = 3,
     repeats: int = 3,
     exact: bool | None = None,
+    store: Any | None = None,
 ) -> tuple[PlanChoice, list[PlanChoice]]:
     """Pick the predicted-fastest feasible plan; optionally verify by running.
+
+    ``store`` forwards to :func:`enumerate_plans`: candidates whose band has
+    a confident calibration-store fit are priced on the measured pack instead
+    of closed-form Eq. 1 (DESIGN.md §11).
 
     ``build(**params) -> StreamPlan`` constructs a candidate;  candidates that
     blow the double-buffered local-memory budget (:meth:`StreamPlan.fits`,
@@ -1015,7 +1048,7 @@ def autotune(
 
     Returns ``(best, all_choices)``.
     """
-    choices = enumerate_plans(build, candidates, acc, exact=exact)
+    choices = enumerate_plans(build, candidates, acc, exact=exact, store=store)
     feasible = [c for c in choices if c.feasible]
     if not feasible:
         codes = sorted({d.code for c in choices for d in c.diagnostics

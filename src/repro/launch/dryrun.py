@@ -44,6 +44,7 @@ from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core import plan as planlib
 from repro.core import roofline as rf
 from repro.core.bsp import TPU_V5E_CHIP, BSPAccelerator
+from repro.core.calibstore import get_default_store
 from repro.core.health import HealthMonitor
 from repro.core.hlo import collective_bytes, fused_bytes
 from repro.distributed import ctx
@@ -325,6 +326,10 @@ def run_cell(
         # static findings rolled up by BSPS code, same shape as
         # ServeEngine.stats()["health"] / train() result["health"]
         "health": health.rollup(),
+        # what measured evidence this process has accumulated (DESIGN.md
+        # §11): band coverage tells the reader which of the cell's Eq. 1
+        # predictions a store refit could already cross-check
+        "calibstore": get_default_store().summary(),
     }
 
     t0 = time.time()

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.bsp import BSPAccelerator
 from repro.core.calibrate import default_machine
+from repro.core.calibstore import get_default_store, plan_band
 from repro.core.faults import FaultInjected
 from repro.core.health import HealthMonitor
 from repro.core.hyperstep import HyperstepRunner
@@ -291,6 +292,21 @@ class ServeEngine:
         Bounded retry on a failed segment dispatch (simulated preemption):
         up to ``dispatch_retries`` retries with exponential backoff before
         the failure propagates out of :meth:`step_segment`.
+    calibstore:
+        Where measured segments land and where drift refits come from
+        (DESIGN.md §11). ``None`` uses the process default store
+        (:func:`repro.core.calibstore.get_default_store`), a
+        :class:`~repro.core.calibstore.CalibrationStore` isolates this
+        engine, ``False`` disables recording *and* recalibration.
+    drift_band / drift_window:
+        The BSPS220 drift detector (see :class:`HealthMonitor`): when the
+        median predicted/measured ratio of the last ``drift_window``
+        segments leaves ``drift_band`` × baseline, the engine refits
+        (g, l, e) from the store for the current decode plan's band, adopts
+        the refit pack for prediction *and* admission pricing (BSPS221),
+        and re-prices the pending admission so the next segment's
+        measurement confirms the verdict. No usable fit → BSPS222 and the
+        degraded-mode derate remains the only protection.
     """
 
     def __init__(self, cfg, params, *, max_lanes: int = 4,
@@ -303,7 +319,10 @@ class ServeEngine:
                  slo_band: tuple[float, float] = (0.05, 20.0),
                  slo_warmup: int = 2,
                  degrade_after: int = 2, recover_after: int = 2,
-                 dispatch_retries: int = 3, retry_backoff_s: float = 0.01):
+                 dispatch_retries: int = 3, retry_backoff_s: float = 0.01,
+                 calibstore: Any | None = None,
+                 drift_band: tuple[float, float] = (0.5, 2.0),
+                 drift_window: int = 4):
         if any(b.mixer != "attn" for b in cfg.pattern):
             raise ValueError(
                 f"ServeEngine needs an attention-only stack; {cfg.name} has "
@@ -319,9 +338,17 @@ class ServeEngine:
         self.segment_len = int(segment_len)
         self.temperature = float(temperature)
         self.machine = machine or default_machine()
+        # the pack predictions and admissions are priced on *right now*:
+        # self.machine until a drift refit is adopted (then BSPS221 swaps it)
+        self.active_machine = self.machine
+        if calibstore is None:
+            calibstore = get_default_store()
+        self.calibstore = calibstore if calibstore is not False else None
         self.faults = faults
         self.health = HealthMonitor(band=slo_band, warmup=slo_warmup,
-                                    name=f"engine_{cfg.name}")
+                                    name=f"engine_{cfg.name}",
+                                    drift_band=drift_band,
+                                    drift_window=drift_window)
         self.degraded = False
         self._degrade_after = int(degrade_after)
         self._recover_after = int(recover_after)
@@ -358,7 +385,9 @@ class ServeEngine:
         self._runner = HyperstepRunner(
             self._make_step(), [], out_streams=self.lane_streams,
             machine=self.machine, verify=verify, faults=faults,
-            health=self.health)
+            health=self.health,
+            calibstore=self.calibstore if self.calibstore is not None
+            else False)
         self._runner.compile(self.segment_len, donate=False)
 
         # Eq. 1 bookkeeping for the admission plans
@@ -458,17 +487,28 @@ class ServeEngine:
         )
 
     def _admission_machine(self) -> BSPAccelerator:
-        """The machine admission prices against — derated while degraded.
+        """The machine admission prices against.
 
-        Entering degraded mode re-prices the decode plan with the *measured*
-        slowdown (the SLO ratio that tripped BSPS208) folded into the
-        compute rate: the BSF boundary moves left, so admissions that only
-        paid at healthy speed are refused until the SLO recovers.
+        Three packs, in order of preference: an adopted calibration-store
+        refit (BSPS221 — measured (g, l, e), the drift priced where it
+        actually lives), else the fixed degraded-mode derate (BSPS208 — the
+        measured slowdown folded into the compute rate, a blunt instrument
+        that moves the BSF boundary left), else the calibrated original.
         """
+        if self.active_machine is not self.machine:
+            return self.active_machine     # refit pack carries the drift
         if not self.degraded or self._slo_scale <= 1.0:
             return self.machine
         return dataclasses.replace(
             self.machine, r=self.machine.r / self._slo_scale)
+
+    def _machine_pack_label(self) -> str:
+        """Which pack :meth:`_admission_machine` is returning right now."""
+        if self.active_machine is not self.machine:
+            return "refit"
+        if self.degraded and self._slo_scale > 1.0:
+            return "derated"
+        return "calibrated"
 
     def _try_join(self) -> None:
         """Admit queued requests while Eq. 1 says one more lane still pays.
@@ -499,6 +539,8 @@ class ServeEngine:
                 "rid": req.rid, "segment": self._segments_run,
                 "occupancy_before": occupancy,
                 "measured_verdict": None,       # filled by the next segment
+                "machine_pack": self._machine_pack_label(),
+                "repriced": False,
                 **dec.row(),
             })
             if not dec.admit:
@@ -648,6 +690,89 @@ class ServeEngine:
                 f"{self.health.consecutive_healthy} healthy segments; "
                 "admissions resume", index=self._segments_run - 1)
 
+    def _maybe_recalibrate(self) -> None:
+        """Consume a pending drift event: refit, adopt, re-price (DESIGN.md §11).
+
+        The HealthMonitor queues a :class:`RecalibrationEvent` when the
+        median predicted/measured ratio of recent segments leaves the drift
+        band (BSPS220). This closes the loop: refit (g, l, e) from the
+        calibration store's most recent records for the current decode
+        plan's band — a window of ``drift_window`` records, exactly the
+        segments whose sustained shift fired the detector, so the fit
+        follows the drift instead of averaging it away against the healthy
+        history — adopt the refit pack for the runner's predictions and the
+        admission pricing (BSPS221), rebaseline the SLO scorer on it, and
+        re-price the pending admission so the next segment's measurement
+        confirms the refit verdict. No store, or an under-evidenced /
+        low-confidence fit, keeps the original pack (BSPS222) — the
+        degraded-mode derate then remains the only protection.
+        """
+        event = self.health.pop_recalibration()
+        if event is None:
+            return
+        seg = self._segments_run - 1
+        if self.calibstore is None:
+            self.health.emit(
+                "BSPS222", "calibration drift detected but recording is "
+                f"disabled; nothing to refit from (ratio {event.ratio:.3g}x "
+                "baseline)", index=seg, value=event.ratio)
+            return
+        band = plan_band(self._runner.plan)
+        refit = self.calibstore.refit_machine(
+            self.machine, band=band, window=self.health.drift_window)
+        if refit is None:
+            self.health.emit(
+                "BSPS222", f"calibration drift (ratio {event.ratio:.3g}x "
+                f"baseline) but band {band} is under-evidenced; keeping the "
+                "closed-form pack", index=seg, value=event.ratio)
+            return
+        self.active_machine = refit
+        self._runner.machine = refit
+        self.health.rebaseline()
+        self.health.emit(
+            "BSPS221", f"adopted calibration-store refit for band {band}: "
+            f"g {self.machine.g:.3g}->{refit.g:.3g}, "
+            f"l {self.machine.l:.3g}->{refit.l:.3g}, "
+            f"e {self.machine.e:.3g}->{refit.e:.3g}; admission re-priced",
+            index=seg, value=refit.e / max(self.machine.e, 1e-12))
+        self._reprice_admission()
+
+    def _reprice_admission(self) -> None:
+        """Log a fresh admission verdict priced on the refit pack.
+
+        The head-of-queue request (or, with an empty queue, the standing
+        occupancy) is priced again through :func:`admission_decision` on
+        :meth:`_admission_machine` and logged with ``repriced=True``; the
+        next segment fills ``measured_verdict`` like any admission row, so
+        the refit pack's verdicts get confirmed by the same
+        predicted-vs-measured bookkeeping as the originals.
+        """
+        occupancy = self._occupancy()
+        if occupancy == 0 and not self.queue:
+            return
+        if self.queue:
+            req = self.queue[0]
+            current = self._decode_plan(occupancy) if occupancy else None
+            candidate = self._decode_plan(occupancy + 1,
+                                          extra_len=req.prompt_len)
+            rid, tokens = req.rid, occupancy + 1
+        else:
+            # no queue: re-price the standing batch itself (candidate-only
+            # form — the verdict side of Eq. 1's max, no join policy)
+            current, candidate = None, self._decode_plan(occupancy)
+            rid, tokens = -1, occupancy
+        dec = admission_decision(current, candidate,
+                                 self._admission_machine(),
+                                 tokens_per_hyperstep=tokens)
+        self.admission_log.append({
+            "rid": rid, "segment": self._segments_run,
+            "occupancy_before": occupancy,
+            "measured_verdict": None,       # filled by the next segment
+            "machine_pack": self._machine_pack_label(),
+            "repriced": True,
+            **dec.row(),
+        })
+
     def step_segment(self) -> int:
         """Run one packed segment; returns tokens harvested for real requests."""
         self._expire_deadlines()
@@ -691,6 +816,7 @@ class ServeEngine:
                 self._retire(req)
         self.pool.reset_inactive(self._active)
         self._update_degradation()
+        self._maybe_recalibrate()
         self._expire_deadlines()
 
         self.segment_log.append({
@@ -741,5 +867,8 @@ class ServeEngine:
             "cancelled": sum(
                 1 for r in self.finished.values() if r.cancelled),
             "degraded": self.degraded,
+            "machine_pack": self._machine_pack_label(),
+            "repriced_admissions": sum(
+                1 for a in self.admission_log if a.get("repriced")),
             "health": self.health.rollup(),
         }

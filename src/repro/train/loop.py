@@ -50,6 +50,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.core.bsp import BSPAccelerator
 from repro.core.calibrate import calibrate, calibrate_host_level
+from repro.core.calibstore import get_default_store, plan_band
 from repro.core.health import HealthMonitor
 from repro.core.hyperstep import HyperstepRunner
 from repro.core.plan import host_plan
@@ -132,6 +133,66 @@ def _aggregate_rows(rows: list[dict[str, float]]) -> dict[str, float]:
     return out
 
 
+def _maybe_recalibrate(
+    health: Any,
+    calibstore: Any,
+    runner: HyperstepRunner,
+    stream: TokenStream,
+    log: Callable[[str], None],
+) -> BSPAccelerator | None:
+    """Consume a pending drift event: refit the pack, re-price the prefetch.
+
+    The training-side half of the DESIGN.md §11 loop. When the
+    HealthMonitor's windowed median predicted/measured ratio leaves the
+    drift band (BSPS220), refit (g, l, e) from the calibration store's most
+    recent records for this plan's band — the segments whose sustained
+    shift fired the detector — and swap the runner onto the refit pack
+    (BSPS221). The online response: re-price the prefetch depth. A link
+    measured slower than the pack promised (e grew) needs the producer
+    running further ahead for the same compute/fetch overlap, so the depth
+    scales by ``e_refit / e_old``. No store or an under-evidenced fit keeps
+    the original pack (BSPS222). Returns the refit machine or None.
+    """
+    if health is None:
+        return None
+    event = health.pop_recalibration()
+    if event is None:
+        return None
+    src = getattr(health, "name", "train")
+    if calibstore is None or runner.plan is None or runner.machine is None:
+        health.emit(
+            "BSPS222", "calibration drift detected but recording is "
+            f"disabled; nothing to refit from (ratio {event.ratio:.3g}x "
+            "baseline)", source=src, index=event.index, value=event.ratio)
+        return None
+    band = plan_band(runner.plan)
+    old = runner.machine
+    refit = calibstore.refit_machine(old, band=band,
+                                     window=health.drift_window)
+    if refit is None:
+        health.emit(
+            "BSPS222", f"calibration drift (ratio {event.ratio:.3g}x "
+            f"baseline) but band {band} is under-evidenced; keeping the "
+            "closed-form pack", source=src, index=event.index,
+            value=event.ratio)
+        return None
+    runner.machine = refit
+    scale = refit.e / max(old.e, 1e-12)
+    if scale > 1.0:
+        depth = max(4, int(np.ceil(max(stream.prefetch_depth, 2)
+                                   * min(scale, 8.0))))
+        stream.start_prefetch(depth)
+        log(f"[health] recalibrated: link {scale:.2f}x slower than the pack "
+            f"promised; prefetch depth -> {depth}")
+    health.rebaseline()
+    health.emit(
+        "BSPS221", f"adopted calibration-store refit for band {band}: "
+        f"g {old.g:.3g}->{refit.g:.3g}, l {old.l:.3g}->{refit.l:.3g}, "
+        f"e {old.e:.3g}->{refit.e:.3g}; prefetch re-priced",
+        source=src, index=event.index, value=scale)
+    return refit
+
+
 def _train_compiled(
     cfg: ModelConfig,
     tcfg: TrainConfig,
@@ -148,6 +209,7 @@ def _train_compiled(
     host_supersteps: float = 0.0,
     faults: Any | None = None,
     health: Any | None = None,
+    calibstore: Any | None = None,
 ) -> tuple[Any, Any, dict[str, float]]:
     """Run training as compiled dispatches, one per checkpoint interval.
 
@@ -197,7 +259,9 @@ def _train_compiled(
                 HyperstepRunner(hyperstep, [batches],
                                 out_streams=[metrics_out],
                                 plan=plan, machine=machine,
-                                faults=faults, health=health),
+                                faults=faults, health=health,
+                                calibstore=(calibstore if calibstore
+                                            is not None else False)),
                 metrics_out)
         return runners[seg]
 
@@ -222,6 +286,13 @@ def _train_compiled(
                     f"gnorm {entry['grad_norm']:.3f}")
             history.append(entry)
         rows.append(runner.predicted_vs_measured())
+        refit = _maybe_recalibrate(health, calibstore, runner, stream, log)
+        if refit is not None:
+            # every cached segment program re-prices on the refit pack (the
+            # compiled scans themselves are untouched — only the clock moved)
+            machine = refit
+            for cached_runner, _ in runners.values():
+                cached_runner.machine = refit
         done += seg
         if tcfg.ckpt_dir and done % tcfg.ckpt_every == 0 and done < tcfg.steps:
             # segment boundary: checkpoint I/O between dispatches (the run's
@@ -244,6 +315,7 @@ def train(
     mesh: Any | None = None,
     log: Callable[[str], None] = print,
     faults: Any | None = None,
+    calibstore: Any | None = None,
 ) -> dict[str, Any]:
     """Run (or resume) a training job; returns final state + history.
 
@@ -254,6 +326,13 @@ def train(
     token-for-token what an uncrashed run produces. The result carries the
     run's :class:`~repro.core.health.HealthMonitor` rollup under
     ``"health"``.
+
+    ``calibstore`` closes the calibration loop (DESIGN.md §11): measured
+    segments land in the store, and a sustained predicted/measured drift
+    (BSPS220) refits (g, l, e) from it and re-prices the prefetch depth
+    online (BSPS221). ``None`` uses the process default store, a
+    :class:`~repro.core.calibstore.CalibrationStore` isolates this run,
+    ``False`` disables recording and recalibration.
 
     ``machine`` is the :class:`BSPAccelerator` the run is priced on (default:
     a fast host calibration) — the returned ``plan_row`` is the runner's
@@ -275,10 +354,11 @@ def train(
             return _train_body(cfg, tcfg, opt, batch_putter=batch_putter,
                                data_cfg=data_cfg, jit_kwargs=jit_kwargs,
                                machine=machine, mesh=mesh, log=log,
-                               faults=faults)
+                               faults=faults, calibstore=calibstore)
     return _train_body(cfg, tcfg, opt, batch_putter=batch_putter,
                        data_cfg=data_cfg, jit_kwargs=jit_kwargs,
-                       machine=machine, mesh=None, log=log, faults=faults)
+                       machine=machine, mesh=None, log=log, faults=faults,
+                       calibstore=calibstore)
 
 
 def _train_body(
@@ -293,9 +373,13 @@ def _train_body(
     mesh: Any | None,
     log: Callable[[str], None],
     faults: Any | None = None,
+    calibstore: Any | None = None,
 ) -> dict[str, Any]:
     data_cfg = data_cfg or DataConfig(
         vocab_size=cfg.vocab_size, seq_len=512, global_batch=8, seed=tcfg.seed)
+    if calibstore is None:
+        calibstore = get_default_store()
+    calibstore = calibstore if calibstore is not False else None
     health = HealthMonitor(name=f"train_{cfg.name}")
     stream = TokenStream(data_cfg, faults=faults, health=health)
 
@@ -422,11 +506,15 @@ def _train_body(
                     fetch_dominant = 0
             else:
                 fetch_dominant = 0
+            # drift response (DESIGN.md §11): sustained predicted/measured
+            # shift → refit from the calibration store, re-price the prefetch
+            _maybe_recalibrate(health, calibstore, runner, stream, log)
 
         runner = HyperstepRunner(
             hyperstep, [batches], out_streams=out_streams,
             on_hyperstep_end=on_end, plan=plan, machine=machine,
             faults=faults, health=health,
+            calibstore=calibstore if calibstore is not None else False,
         )
         params, opt_state = runner.run((params, opt_state))
         if runner.records:  # on_end never fires after the terminal hyperstep
@@ -447,7 +535,7 @@ def _train_body(
                     history, machine, data_cfg, log,
                     host_comm_words=host_comm_words,
                     host_supersteps=host_supersteps,
-                    faults=faults, health=health)
+                    faults=faults, health=health, calibstore=calibstore)
             elif steps_left > 0:
                 machine = machine or calibrate(fast=True)
                 params, opt_state, plan_row = _run_host_loop(
